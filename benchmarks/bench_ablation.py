@@ -1,0 +1,62 @@
+"""Fig. 16 — ablation: RP+RR / RP+SR / LP+RR / LP+SR (placement x routing).
+
+Paper: RP+SR 1.32-1.36x online; LP+RR 2.15-2.60x; LP+SR 3.26-3.66x; offline
+(PageRank) RP+SR 1.47-2.50x, LP+RR 1.15-1.19x, LP+SR 2.95-3.88x."""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core import analytics
+from repro.core.placement import PlacementConfig
+from repro.core.store import GeoGraphStore
+
+from .common import csv_row, make_setup, mean_online_latency
+
+GRID = {
+    "RP+RR": ("random", "random"),
+    "RP+SR": ("random", "stepwise"),
+    "LP+RR": ("geolayer", "random"),
+    "LP+SR": ("geolayer", "stepwise"),
+}
+
+
+def run(fast: bool = True) -> Dict[str, Dict[str, float]]:
+    out = {}
+    rows = []
+    for ds in ["snb"] if fast else ["snb", "uk", "tw"]:
+        setup = make_setup(ds, 120 if fast else 500, 40 if fast else 120)
+        lat = {}
+        pr_time = {}
+        for name, (placement, routing) in GRID.items():
+            cfg = PlacementConfig(precache=placement == "geolayer", dhd_steps=8)
+            store = GeoGraphStore(setup.g, setup.env, setup.workload,
+                                  config=cfg, placement=placement, routing=routing)
+            lat[name] = mean_online_latency(store, setup.test_patterns)
+            # offline: route all nodes, price a PageRank run
+            req = np.arange(setup.g.n_nodes)
+            if routing == "stepwise":
+                plan = store.plan_offline(req, n_iters=15)
+                site = plan.item_site[: setup.g.n_nodes].copy()
+                site[site < 0] = setup.g.partition[site < 0]
+            else:
+                site = setup.g.partition.copy()  # random routing = in place
+            ex = analytics.simulate_execution(setup.env, setup.g, site, 15, msg_bytes=192.0, edge_rate=5e8)
+            pr_time[name] = ex.time_s
+        base_on, base_off = lat["RP+RR"], pr_time["RP+RR"]
+        speed = {
+            n: dict(online=base_on / max(lat[n], 1e-12),
+                    offline=base_off / max(pr_time[n], 1e-12))
+            for n in GRID
+        }
+        out[ds] = speed
+        for n, s_ in speed.items():
+            rows.append(csv_row(f"fig16_{ds}_{n}", lat[n] * 1e6,
+                                f"online={s_['online']:.2f}x offline={s_['offline']:.2f}x"))
+    print("\n".join(rows))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Fig. 8 — cost metric breakdown (C^S, C^R, C^W, C^A) per strategy,
+normalized to GeoLayer's total.  Paper: GeoLayer cuts total cost 60.8% vs
+Random-3, 57.5% vs Top-3, 31.1% vs ADP, 28.1% vs DCD."""
+from __future__ import annotations
+
+from typing import Dict
+
+from .common import DATASETS, ONLINE_STRATEGIES, csv_row, make_setup, strategy_store, timed
+
+
+def run(fast: bool = True) -> Dict[str, Dict[str, Dict[str, float]]]:
+    n_hist, n_test = (120, 30) if fast else (600, 150)
+    out = {}
+    rows = []
+    for ds in (DATASETS if not fast else DATASETS[:2]):
+        setup = make_setup(ds, n_hist, n_test)
+        per = {}
+        base_total = None
+        for strat in ONLINE_STRATEGIES:
+            dt, store = timed(strategy_store, setup, strat)
+            c = store.cost().as_dict()
+            per[strat] = c
+            if strat == "geolayer":
+                base_total = max(c["total"], 1e-12)
+        for strat, c in per.items():
+            norm = {k: v / base_total for k, v in c.items()}
+            rows.append(csv_row(f"fig8_{ds}_{strat}", 0.0,
+                                f"total={norm['total']:.3f} assoc={norm['assoc']:.3f} read={norm['read']:.3f}"))
+        out[ds] = per
+    print("\n".join(rows))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Fig. 10 — placement algorithm execution time per strategy.
+
+Paper: Random/Top trivial; ADP slowest (hypergraph partitioning rounds);
+GeoLayer moderate (layered decomposition + cluster parallelism)."""
+from __future__ import annotations
+
+from typing import Dict
+
+from .common import DATASETS, ONLINE_STRATEGIES, csv_row, make_setup, strategy_store, timed
+
+
+def run(fast: bool = True) -> Dict[str, Dict[str, float]]:
+    n_hist = 120 if fast else 600
+    out = {}
+    rows = []
+    for ds in DATASETS[:1] if fast else DATASETS:
+        setup = make_setup(ds, n_hist, 20)
+        per = {}
+        for strat in ONLINE_STRATEGIES:
+            dt, store = timed(strategy_store, setup, strat)
+            per[strat] = store.stats.placement_time_s
+            rows.append(csv_row(f"fig10_{ds}_{strat}", per[strat] * 1e6,
+                                f"layered_build_s={store.stats.build_time_s:.3f}"))
+        out[ds] = per
+    print("\n".join(rows))
+    return out
+
+
+if __name__ == "__main__":
+    run()

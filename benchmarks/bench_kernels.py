@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks: CPU-path timing (the jnp reference is the CPU
+production path; Pallas kernels are TPU-target, validated in interpret mode
+by tests/).  Reports us/call + achieved GB/s on the ref path."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import csv_row
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(fast: bool = True) -> Dict[str, float]:
+    rng = np.random.default_rng(0)
+    rows = []
+    out = {}
+    # attention
+    b, hq, hkv, s, d = 1, 8, 4, 512, 64
+    q = jnp.asarray(rng.standard_normal((b, hq, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    f = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    dt = _time(f, q, k, v)
+    bytes_ = (q.nbytes + k.nbytes + v.nbytes) * 2
+    rows.append(csv_row("kernel_attention_ref", dt * 1e6, f"GBps={bytes_/dt/1e9:.2f}"))
+    out["attention"] = dt
+    # dhd step
+    n, kmax = 4096, 16
+    cols = jnp.asarray(rng.integers(0, n, (n, kmax)), jnp.int32)
+    vals = jnp.asarray(rng.random((n, kmax)), jnp.float32)
+    heat = jnp.asarray(rng.random(n), jnp.float32)
+    qq = jnp.zeros(n, jnp.float32)
+    f = jax.jit(lambda h: ref.dhd_ell_ref(h, cols, vals, qq))
+    dt = _time(f, heat)
+    rows.append(csv_row("kernel_dhd_ref", dt * 1e6,
+                        f"Medges_per_s={(n*kmax)/dt/1e6:.1f}"))
+    out["dhd"] = dt
+    # embedding bag
+    V, D, B, L = 65536, 32, 1024, 20
+    tab = jnp.asarray(rng.standard_normal((V, D)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, V, (B, L)), jnp.int32)
+    f = jax.jit(lambda i: ref.embedding_bag_ref(tab, i))
+    dt = _time(f, idx)
+    rows.append(csv_row("kernel_embedding_bag_ref", dt * 1e6,
+                        f"Mlookups_per_s={(B*L)/dt/1e6:.1f}"))
+    out["embedding_bag"] = dt
+    print("\n".join(rows))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Fig. 7 — normalized online pattern-request response time per dataset.
+
+Paper result: GeoLayer 3.4x over Random-3, 2.8x over Top-3, 1.8x over ADP,
+1.6x over DCD (averaged).  Reports latency normalized to GeoLayer (=1.0).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from .common import (
+    DATASETS,
+    ONLINE_STRATEGIES,
+    csv_row,
+    make_setup,
+    mean_online_latency,
+    strategy_store,
+    timed,
+)
+
+
+def run(fast: bool = True) -> Dict[str, Dict[str, float]]:
+    n_hist, n_test = (120, 40) if fast else (600, 150)
+    out: Dict[str, Dict[str, float]] = {}
+    rows = []
+    for ds in DATASETS:
+        setup = make_setup(ds, n_hist, n_test)
+        lat: Dict[str, float] = {}
+        for strat in ONLINE_STRATEGIES:
+            dt, store = timed(strategy_store, setup, strat)
+            l = mean_online_latency(store, setup.test_patterns)
+            lat[strat] = l
+            rows.append(csv_row(f"fig7_{ds}_{strat}", l * 1e6, f"build_s={dt:.2f}"))
+        base = max(lat["geolayer"], 1e-9)
+        out[ds] = {s: lat[s] / base for s in ONLINE_STRATEGIES}
+    for ds, norm in out.items():
+        speeds = {s: f"{v:.2f}x" for s, v in norm.items()}
+        rows.append(csv_row(f"fig7_{ds}_normalized", 0.0, str(speeds)))
+    print("\n".join(rows))
+    return out
+
+
+if __name__ == "__main__":
+    run()

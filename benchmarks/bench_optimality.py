@@ -1,0 +1,46 @@
+"""Fig. 9 — optimality gap vs the exact BIP optimum on a WIKI-vote-scale
+graph.  Paper reports Gap = (C - C*)/C* = 7.8% with PuLP/CBC; we brute-force
+the same optimum (coordinate-descent exact-improvement; DESIGN §9)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core.cost import total_cost
+from repro.core.graph import build_csr
+from repro.core.latency import make_paper_env
+from repro.core.optimal import solve_coordinate_descent
+from repro.core.patterns import Workload, generate_khop_patterns
+from repro.data.synthetic import make_benchmark_graph
+
+from .common import csv_row, strategy_store, make_setup
+from repro.core.placement import PlacementConfig
+from repro.core.store import GeoGraphStore
+
+
+def run(fast: bool = True) -> Dict[str, float]:
+    # tiny instance so the exact solver is tractable
+    g = make_benchmark_graph("wiki", seed=3, n_dcs=4)
+    env = make_paper_env()
+    csr = build_csr(g.n_nodes, g.src, g.dst, symmetrize=True)
+    # the exact reference is only meaningful where the solver converges:
+    # keep the instance tiny in both modes (paper's WIKI-vote plays the
+    # same role — small enough for CBC)
+    n_pat = 8
+    pats = generate_khop_patterns(g, csr, n_pat, hops=2, branch=1, seed=7, n_dcs=env.n_dcs)
+    wl = Workload.from_patterns(pats, g.n_items, env.n_dcs)
+    sizes = g.item_size()
+    primary = np.concatenate([g.partition, g.partition[g.src]]).astype(np.int64)
+
+    store = GeoGraphStore(g, env, wl, config=PlacementConfig(precache=False, dhd_steps=8))
+    c_geo = store.cost().total
+    _, c_star = solve_coordinate_descent(wl, env, sizes, primary, max_rounds=3)
+    gap = (c_geo - c_star) / max(c_star, 1e-12) * 100.0
+    print(csv_row("fig9_optimality_gap", 0.0,
+                  f"C={c_geo:.4f} C*={c_star:.4f} gap={gap:.1f}% (paper: 7.8%)"))
+    return {"C": c_geo, "C_star": c_star, "gap_pct": gap}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""GeoLayer at mesh scale: plan halo replication for distributed GNN
+training — the paper's replica-placement logic applied to a TPU mesh
+(DESIGN §4.2).  Shows cut-edge resolution vs replication budget, i.e. the
+collective-traffic reduction the §Perf hillclimb measures.
+
+    PYTHONPATH=src python examples/gnn_halo_placement.py
+"""
+import numpy as np
+
+from repro.core.layered_graph import build_layered_graph
+from repro.distributed.geo_sharding import mesh_env, plan_gnn_halo
+from repro.data.synthetic import make_benchmark_graph
+from repro.data.partition import balanced_bfs_partition
+
+
+def main() -> None:
+    n_shards = 16
+    g = make_benchmark_graph("tw", n_dcs=n_shards)
+    g.partition = balanced_bfs_partition(g.n_nodes, g.src, g.dst, n_shards)
+    heat = np.random.default_rng(0).zipf(1.5, g.n_nodes).astype(float)
+    heat = np.minimum(heat, 50)
+
+    env = mesh_env(n_shards, shards_per_pod=8)
+    lg = build_layered_graph(g, env, thresholds_s=[1e-5])
+    print("mesh-level layered graph (shards = DCs, ICI/DCN = WAN tiers):")
+    print(lg.summary())
+
+    print("\nbudget  halo_vertices  cut_edges_resolved")
+    for budget in [0.05, 0.1, 0.25, 0.5]:
+        plan = plan_gnn_halo(g, n_shards, vertex_heat=heat,
+                             n_layers=15, budget_frac=budget)
+        n_halo = sum(len(h) for h in plan.halo)
+        print(f"{budget:5.2f}  {n_halo:12d}  {plan.resolve_frac*100:17.1f}%")
+    print("\nresolved cut edges skip the per-layer cross-shard gather ->")
+    print("collective roofline term drops proportionally (EXPERIMENTS §Perf).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""End-to-end driver: train a ~10M-param LM for a few hundred steps with the
+fault-tolerant trainer (async checkpoints, int8-EF gradient compression,
+injected node failure + recovery), then serve it with continuous batching.
+
+    PYTHONPATH=src python examples/train_lm_geo.py [--steps 200]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.data.pipeline import TokenPipeline
+from repro.distributed.fault import FailureSimulator
+from repro.models.transformer import LMConfig, init_params, train_loss
+from repro.serve.engine import Engine, Request, ServeConfig
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_geo")
+    args = ap.parse_args()
+
+    # ~10M params: a miniature qwen3 (qk_norm GQA + SwiGLU)
+    cfg = LMConfig(name="mini-qwen", n_layers=4, d_model=256, n_heads=8,
+                   n_kv_heads=4, d_ff=768, vocab_size=4096, qk_norm=True,
+                   remat=False)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+    print(f"model: {n/1e6:.1f}M params")
+
+    pipe = TokenPipeline(cfg.vocab_size, batch=16, seq_len=128, seed=0)
+    tcfg = TrainerConfig(
+        total_steps=args.steps,
+        ckpt_every=max(args.steps // 5, 10),
+        ckpt_dir=args.ckpt,
+        grad_compression="int8",
+        microbatch=2,
+        opt=OptConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps),
+    )
+    trainer = Trainer(
+        lambda p, b: train_loss(p, b, cfg), params, tcfg,
+        failure_sim=FailureSimulator([(args.steps // 2, 1)]),
+    )
+    t0 = time.perf_counter()
+    metrics = trainer.run(iter(pipe))
+    dt = time.perf_counter() - t0
+    losses = metrics["loss"]
+    toks = args.steps * 16 * 128
+    print(f"trained {len(losses)} steps in {dt:.1f}s ({toks/dt:.0f} tok/s)")
+    print(f"loss: {losses[0]:.3f} -> {np.mean(losses[-10:]):.3f} "
+          f"(uniform = {np.log(cfg.vocab_size):.3f})")
+    print(f"recoveries: {metrics.get('recoveries', [])}")
+
+    # serve the trained model
+    eng = Engine(trainer.params, cfg, ServeConfig(n_slots=4, max_len=160))
+    rng = np.random.default_rng(1)
+    for i in range(6):
+        eng.submit(Request(rid=i, prompt=rng.integers(0, 4096, 12),
+                           max_new_tokens=16))
+    done = eng.run_to_completion()
+    print(f"served {len(done)} requests, "
+          f"{sum(len(r.out_tokens) for r in done)} tokens generated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""repro: GeoLayer (geo-distributed graph store) on JAX/TPU + arch zoo."""

@@ -1,0 +1,50 @@
+"""Arch registry: ``get_arch(name)`` / ``list_archs()`` / ``all_cells()``."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .base import ArchSpec, Cell
+
+_MODULES = [
+    "deepseek_v2_lite_16b",
+    "granite_moe_3b_a800m",
+    "yi_6b",
+    "gemma3_27b",
+    "qwen3_0_6b",
+    "egnn",
+    "meshgraphnet",
+    "equiformer_v2",
+    "schnet",
+    "bst",
+]
+
+_REGISTRY: Dict[str, ArchSpec] = {}
+
+
+def _load() -> None:
+    if _REGISTRY:
+        return
+    import importlib
+
+    for m in _MODULES:
+        mod = importlib.import_module(f".{m}", __package__)
+        arch = mod.ARCH
+        _REGISTRY[arch.name] = arch
+
+
+def get_arch(name: str) -> ArchSpec:
+    _load()
+    return _REGISTRY[name]
+
+
+def list_archs() -> List[str]:
+    _load()
+    return sorted(_REGISTRY)
+
+
+def all_cells() -> List[Cell]:
+    _load()
+    out: List[Cell] = []
+    for name in sorted(_REGISTRY):
+        out.extend(_REGISTRY[name].cells())
+    return out

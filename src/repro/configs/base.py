@@ -1,0 +1,615 @@
+"""Config system: arch specs, shape cells, abstract inputs, step functions.
+
+Every assigned architecture registers an ``ArchSpec`` subclass instance that
+knows how to (a) build full + smoke model configs, (b) enumerate its
+(shape x kind) cells with skip rules, (c) produce ShapeDtypeStruct inputs +
+PartitionSpecs for the dry-run, and (d) build the jit-able step function.
+
+FLOP accounting note: dry-run configs unroll layer stacks (scan bodies are
+costed once by XLA); training uses scan.  The one exception is
+equiformer-v2's edge-chunk scan on huge graphs — corrected analytically
+(see ``flops_correction``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..distributed.sharding import param_spec_bst, param_spec_gnn, param_spec_lm
+from ..models import transformer as tf
+from ..models.layers import cross_entropy, mlp, mlp_init
+from ..models.recsys.bst import (
+    BSTSpec,
+    bst_forward,
+    bst_init,
+    bst_user_state,
+    retrieval_score,
+)
+from ..train.optimizer import OptConfig, adamw_init, adamw_update
+
+__all__ = [
+    "Cell",
+    "ArchSpec",
+    "LMArch",
+    "GNNArch",
+    "RecsysArch",
+    "LM_SHAPES",
+    "GNN_SHAPES",
+    "RECSYS_SHAPES",
+    "pad_to",
+]
+
+OPT = OptConfig()
+
+
+def pad_to(n: int, mult: int = 512) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def all_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    kind: str  # train | prefill | decode | serve | retrieval
+    skip: Optional[str] = None  # reason, if inapplicable
+    flops_correction: float = 1.0  # multiplier for scan-undercounted HLO
+
+    @property
+    def key(self) -> str:
+        return f"{self.arch}/{self.shape}"
+
+
+# ---------------------------------------------------------------------------
+# Shape tables (assigned)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LMShape:
+    name: str
+    kind: str
+    seq_len: int
+    global_batch: int
+
+
+LM_SHAPES = [
+    LMShape("train_4k", "train", 4096, 256),
+    LMShape("prefill_32k", "prefill", 32768, 32),
+    LMShape("decode_32k", "decode", 32768, 128),
+    LMShape("long_500k", "decode", 524288, 1),
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNShape:
+    name: str
+    n_nodes: int
+    n_edges: int
+    d_feat: int  # feature dim (or n_species for int features)
+    n_classes: int
+    task: str  # node_class | graph_reg
+    n_graphs: int = 1
+    resident_nodes: int = 0  # minibatch: resident feature-table rows
+    seeds: int = 0  # minibatch: #seed nodes with labels
+    int_features: bool = False
+
+
+GNN_SHAPES = [
+    GNNShape("full_graph_sm", pad_to(2708), pad_to(10556), 1433, 7, "node_class"),
+    # reddit-scale sampled block: 1024 seeds, fanout 15-10
+    GNNShape(
+        "minibatch_lg",
+        pad_to(1024 + 1024 * 15 + 1024 * 150),
+        pad_to(1024 * 15 + 1024 * 150),
+        602,
+        41,
+        "node_class",
+        resident_nodes=pad_to(232_965),
+        seeds=1024,
+    ),
+    GNNShape(
+        "ogb_products", pad_to(2_449_029), pad_to(61_859_140), 100, 47, "node_class"
+    ),
+    GNNShape(
+        "molecule", pad_to(128 * 30), pad_to(128 * 64), 16, 0, "graph_reg",
+        n_graphs=128, int_features=False,
+    ),
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysShape:
+    name: str
+    kind: str
+    batch: int
+    n_candidates: int = 0
+
+
+RECSYS_SHAPES = [
+    RecsysShape("train_batch", "train", 65536),
+    RecsysShape("serve_p99", "serve", 512),
+    RecsysShape("serve_bulk", "serve", 262144),
+    RecsysShape("retrieval_cand", "retrieval", 1, pad_to(1_000_000)),
+]
+
+
+# ---------------------------------------------------------------------------
+# Base spec
+# ---------------------------------------------------------------------------
+class ArchSpec:
+    name: str = ""
+    family: str = ""
+
+    def depth_points(self):
+        return None  # no depth scan: HLO costing is exact
+
+    def cells(self) -> List[Cell]:
+        raise NotImplementedError
+
+    def abstract_state(self) -> Tuple[Any, Any]:
+        """(params ShapeDtypeStruct tree, opt ShapeDtypeStruct tree)."""
+        raise NotImplementedError
+
+    def param_partition(self, state_shape) -> Tuple[Any, Any]:
+        raise NotImplementedError
+
+    def make_step(self, cell: Cell) -> Callable:
+        raise NotImplementedError
+
+    def inputs(self, cell: Cell, mesh: Mesh) -> Tuple[Tuple, Tuple]:
+        """(abstract args, PartitionSpec trees), *excluding* params/opt."""
+        raise NotImplementedError
+
+    # smoke-test interface
+    def smoke_params(self, key):
+        raise NotImplementedError
+
+    def smoke_batch(self, key) -> Dict[str, jnp.ndarray]:
+        raise NotImplementedError
+
+    def smoke_loss(self, params, batch) -> jnp.ndarray:
+        raise NotImplementedError
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def make_train_step(loss_fn: Callable) -> Callable:
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        new_params, new_opt, info = adamw_update(grads, opt_state, params, OPT)
+        return new_params, new_opt, loss
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+class LMArch(ArchSpec):
+    family = "lm"
+
+    def __init__(
+        self,
+        name: str,
+        cfg: tf.LMConfig,
+        smoke_cfg: tf.LMConfig,
+        sub_quadratic: bool = False,
+        ep_divisible: bool = True,
+    ) -> None:
+        self.name = name
+        self.cfg = cfg  # scan_layers=True: production layout (memory compile)
+        self.smoke_cfg = smoke_cfg
+        self.sub_quadratic = sub_quadratic
+        self.ep_divisible = ep_divisible
+
+    # differential costing: XLA costs scan bodies once, so the dry-run also
+    # compiles two shallow *unrolled* variants and extrapolates linearly in
+    # depth (launch/dryrun.py).  Returns (L_a, L_b, L_full).
+    def depth_points(self) -> Optional[Tuple[int, int, int]]:
+        if self.cfg.local_global_ratio > 0:
+            period = self.cfg.local_global_ratio + 1
+            return (period, 2 * period, self.cfg.n_layers)
+        return (1, 2, self.cfg.n_layers)
+
+    def variant(self, depth: int) -> "LMArch":
+        v = LMArch(
+            name=f"{self.name}@L{depth}",
+            cfg=dataclasses.replace(
+                self.cfg, n_layers=depth, scan_layers=False
+            ),
+            smoke_cfg=self.smoke_cfg,
+            sub_quadratic=self.sub_quadratic,
+            ep_divisible=self.ep_divisible,
+        )
+        return v
+
+    def cells(self) -> List[Cell]:
+        out = []
+        for s in LM_SHAPES:
+            skip = None
+            if s.name == "long_500k" and not self.sub_quadratic:
+                skip = (
+                    "pure full-attention arch: 500k-context decode requires "
+                    "sub-quadratic attention (assignment skip rule; DESIGN §6)"
+                )
+            out.append(Cell(self.name, s.name, s.kind, skip))
+        return out
+
+    def shape(self, name: str) -> LMShape:
+        return next(s for s in LM_SHAPES if s.name == name)
+
+    # ------------------------------------------------------------- abstracts
+    def abstract_state(self):
+        p = jax.eval_shape(lambda: tf.init_params(jax.random.PRNGKey(0), self.cfg))
+        o = jax.eval_shape(adamw_init, p)
+        return p, o
+
+    def param_partition(self, state_shape):
+        p_shape, _ = state_shape
+        pspec = param_spec_lm(p_shape, self.ep_divisible, fsdp=True)
+        ospec = {"mu": pspec, "nu": pspec, "step": P()}
+        return pspec, ospec
+
+    # ----------------------------------------------------------------- steps
+    def make_step(self, cell: Cell) -> Callable:
+        cfg = self.cfg
+        if cell.kind == "train":
+            return make_train_step(lambda p, b: tf.train_loss(p, b, cfg))
+        if cell.kind == "prefill":
+            return lambda params, tokens: tf.prefill(params, tokens, cfg)
+        if cell.kind == "decode":
+            return lambda params, token, caches, position: tf.decode(
+                params, token, caches, position, cfg
+            )
+        raise ValueError(cell.kind)
+
+    # ---------------------------------------------------------------- inputs
+    def _cache_struct(self, B: int, S: int):
+        c = self.cfg
+        if c.mla:
+            return {
+                "c_kv": _sds((c.n_layers, B, S, c.kv_lora_rank), c.dtype),
+                "k_rope": _sds((c.n_layers, B, S, c.qk_rope_dim), c.dtype),
+            }
+        return {
+            "k": _sds((c.n_layers, B, c.n_kv_heads, S, c.hd), c.dtype),
+            "v": _sds((c.n_layers, B, c.n_kv_heads, S, c.hd), c.dtype),
+        }
+
+    def _cache_spec(self, mesh: Mesh, batch_sharded: bool, seq_sharded: bool):
+        c = self.cfg
+        dp = dp_axes(mesh)
+        b_ax = dp if batch_sharded else None
+        s_ax = "data" if seq_sharded else None
+        if seq_sharded:
+            b_ax = None  # B=1 long-context
+        if c.mla:
+            return {
+                "c_kv": P(None, b_ax, s_ax, "model"),
+                "k_rope": P(None, b_ax, s_ax, None),
+            }
+        # shard kv-head axis when it divides the model axis, else head_dim
+        model_n = mesh.shape["model"]
+        if c.n_kv_heads % model_n == 0:
+            return {
+                "k": P(None, b_ax, "model", s_ax, None),
+                "v": P(None, b_ax, "model", s_ax, None),
+            }
+        return {
+            "k": P(None, b_ax, None, s_ax, "model"),
+            "v": P(None, b_ax, None, s_ax, "model"),
+        }
+
+    def inputs(self, cell: Cell, mesh: Mesh):
+        s = self.shape(cell.shape)
+        dp = dp_axes(mesh)
+        B, S = s.global_batch, s.seq_len
+        if cell.kind == "train":
+            batch = {
+                "tokens": _sds((B, S), jnp.int32),
+                "labels": _sds((B, S), jnp.int32),
+            }
+            spec = {"tokens": P(dp, None), "labels": P(dp, None)}
+            return (batch,), (spec,)
+        if cell.kind == "prefill":
+            return (
+                (_sds((B, S), jnp.int32),),
+                (P(dp, None),),
+            )
+        if cell.kind == "decode":
+            long_ctx = S > 100_000
+            caches = self._cache_struct(B, S)
+            cspec = self._cache_spec(
+                mesh, batch_sharded=not long_ctx, seq_sharded=long_ctx
+            )
+            tok = _sds((B,), jnp.int32)
+            pos = _sds((B,), jnp.int32)
+            tspec = P(dp) if not long_ctx else P()
+            return (tok, caches, pos), (tspec, cspec, tspec)
+        raise ValueError(cell.kind)
+
+    # ----------------------------------------------------------------- smoke
+    def smoke_params(self, key):
+        return tf.init_params(key, self.smoke_cfg)
+
+    def smoke_batch(self, key):
+        tok = jax.random.randint(key, (2, 16), 0, self.smoke_cfg.vocab_size)
+        return {"tokens": tok, "labels": tok}
+
+    def smoke_loss(self, params, batch):
+        loss, _ = tf.train_loss(params, batch, self.smoke_cfg)
+        return loss
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+class GNNArch(ArchSpec):
+    """GNN arch: supplies ``init_fn(key, d_in, d_out, full)`` and
+    ``forward_fn(params, batch, full)`` -> [N, d_out]."""
+
+    family = "gnn"
+
+    def __init__(
+        self,
+        name: str,
+        init_fn: Callable,
+        forward_fn: Callable,
+        flops_correction: Dict[str, float] = {},
+        variant_builder: Optional[Callable] = None,
+        depth_full: int = 0,
+    ) -> None:
+        self.name = name
+        self.init_fn = init_fn
+        self.forward_fn = forward_fn
+        self._fc = dict(flops_correction)
+        self.variant_builder = variant_builder
+        self.depth_full = depth_full
+
+    def depth_points(self) -> Optional[Tuple[int, int, int]]:
+        if self.variant_builder is None:
+            return None  # model is fully unrolled already (exact costing)
+        return (1, 2, self.depth_full)
+
+    def variant(self, depth: int) -> "GNNArch":
+        init_fn, forward_fn = self.variant_builder(depth)
+        return GNNArch(f"{self.name}@L{depth}", init_fn, forward_fn, self._fc)
+
+    def cells(self) -> List[Cell]:
+        return [
+            Cell(self.name, s.name, "train", None, self._fc.get(s.name, 1.0))
+            for s in GNN_SHAPES
+        ]
+
+    def shape(self, name: str) -> GNNShape:
+        return next(s for s in GNN_SHAPES if s.name == name)
+
+    def _d_out(self, s: GNNShape) -> int:
+        return s.n_classes if s.task == "node_class" else 1
+
+    def abstract_state_for(self, shape_name: str):
+        s = self.shape(shape_name)
+        p = jax.eval_shape(
+            lambda: self.init_fn(
+                jax.random.PRNGKey(0), s.d_feat, self._d_out(s), True
+            )
+        )
+        o = jax.eval_shape(adamw_init, p)
+        return p, o
+
+    def abstract_state(self):
+        return self.abstract_state_for("full_graph_sm")
+
+    def param_partition(self, state_shape):
+        p_shape, _ = state_shape
+        pspec = param_spec_gnn(p_shape)
+        ospec = {"mu": pspec, "nu": pspec, "step": P()}
+        return pspec, ospec
+
+    def loss_fn(self, shape_name: str, full: bool = True) -> Callable:
+        s = self.shape(shape_name)
+        fwd = self.forward_fn
+
+        def loss(params, batch):
+            b = dict(batch)
+            if s.resident_nodes:  # gather sampled-block features on device
+                b["x"] = batch["feats_resident"][batch["node_ids"]]
+            out = fwd(params, b, full, s.name)
+            if s.task == "node_class":
+                if s.seeds:  # minibatch: loss on seed nodes only
+                    logits = out[: s.seeds]
+                    ce = cross_entropy(logits, batch["labels"][: s.seeds])
+                else:
+                    ce = cross_entropy(
+                        out, batch["labels"], mask=batch["node_mask"].astype(jnp.float32)
+                    )
+                return ce, {"ce": ce}
+            # graph regression: masked sum-readout per graph
+            from ..models.gnn.common import graph_readout
+
+            e = graph_readout(
+                out, batch["graph_id"], s.n_graphs, batch["node_mask"]
+            )[:, 0]
+            mse = jnp.mean((e - batch["energy"]) ** 2)
+            return mse, {"mse": mse}
+
+        return loss
+
+    def make_step(self, cell: Cell) -> Callable:
+        return make_train_step(self.loss_fn(cell.shape, full=True))
+
+    def inputs(self, cell: Cell, mesh: Mesh):
+        s = self.shape(cell.shape)
+        ax = all_axes(mesh)
+        N, E = s.n_nodes, s.n_edges
+        batch: Dict[str, Any] = {
+            "pos": _sds((N, 3), jnp.float32),
+            "edge_src": _sds((E,), jnp.int32),
+            "edge_dst": _sds((E,), jnp.int32),
+            "edge_mask": _sds((E,), jnp.bool_),
+            "node_mask": _sds((N,), jnp.bool_),
+        }
+        spec: Dict[str, Any] = {
+            "pos": P(ax, None),
+            "edge_src": P(ax),
+            "edge_dst": P(ax),
+            "edge_mask": P(ax),
+            "node_mask": P(ax),
+        }
+        if s.resident_nodes:
+            batch["feats_resident"] = _sds((s.resident_nodes, s.d_feat), jnp.float32)
+            spec["feats_resident"] = P(ax, None)
+            batch["node_ids"] = _sds((N,), jnp.int32)
+            spec["node_ids"] = P(ax)
+            batch["labels"] = _sds((N,), jnp.int32)
+            spec["labels"] = P(ax)
+        else:
+            batch["x"] = _sds((N, s.d_feat), jnp.float32)
+            spec["x"] = P(ax, None)
+            if s.task == "node_class":
+                batch["labels"] = _sds((N,), jnp.int32)
+                spec["labels"] = P(ax)
+            else:
+                batch["graph_id"] = _sds((N,), jnp.int32)
+                spec["graph_id"] = P(ax)
+                batch["energy"] = _sds((s.n_graphs,), jnp.float32)
+                spec["energy"] = P()
+        return (batch,), (spec,)
+
+    # ----------------------------------------------------------------- smoke
+    def smoke_params(self, key):
+        return self.init_fn(key, 8, 3, False)
+
+    def smoke_batch(self, key):
+        rng = np.random.default_rng(0)
+        n, e = 24, 48
+        return {
+            "x": jnp.asarray(rng.standard_normal((n, 8)), jnp.float32),
+            "pos": jnp.asarray(rng.standard_normal((n, 3)), jnp.float32),
+            "edge_src": jnp.asarray(rng.integers(0, n, e), jnp.int32),
+            "edge_dst": jnp.asarray(rng.integers(0, n, e), jnp.int32),
+            "edge_mask": jnp.ones((e,), bool),
+            "node_mask": jnp.ones((n,), bool),
+            "labels": jnp.asarray(rng.integers(0, 3, n), jnp.int32),
+        }
+
+    def smoke_loss(self, params, batch):
+        out = self.forward_fn(params, batch, False, None)
+        return cross_entropy(out, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Recsys family (BST)
+# ---------------------------------------------------------------------------
+class RecsysArch(ArchSpec):
+    family = "recsys"
+
+    def __init__(self, name: str, spec: BSTSpec, smoke_spec: BSTSpec) -> None:
+        self.name = name
+        self.spec = spec
+        self.smoke_spec = smoke_spec
+
+    def cells(self) -> List[Cell]:
+        return [Cell(self.name, s.name, s.kind) for s in RECSYS_SHAPES]
+
+    def shape(self, name: str) -> RecsysShape:
+        return next(s for s in RECSYS_SHAPES if s.name == name)
+
+    def abstract_state(self):
+        p = jax.eval_shape(lambda: bst_init(jax.random.PRNGKey(0), self.spec))
+        o = jax.eval_shape(adamw_init, p)
+        return p, o
+
+    def param_partition(self, state_shape):
+        p_shape, _ = state_shape
+        pspec = param_spec_bst(p_shape)
+        ospec = {"mu": pspec, "nu": pspec, "step": P()}
+        return pspec, ospec
+
+    def loss_fn(self) -> Callable:
+        spec = self.spec
+
+        def loss(params, batch):
+            logits = bst_forward(params, batch, spec)
+            lab = batch["label"]
+            bce = jnp.mean(
+                jnp.maximum(logits, 0) - logits * lab + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+            )
+            return bce, {"bce": bce}
+
+        return loss
+
+    def make_step(self, cell: Cell) -> Callable:
+        spec = self.spec
+        if cell.kind == "train":
+            return make_train_step(self.loss_fn())
+        if cell.kind == "serve":
+            return lambda params, batch: bst_forward(params, batch, spec)
+        if cell.kind == "retrieval":
+            def retrieve(params, batch):
+                u = bst_user_state(params, batch, spec)
+                return retrieval_score(params, u, batch["cand_ids"])
+
+            return retrieve
+        raise ValueError(cell.kind)
+
+    def inputs(self, cell: Cell, mesh: Mesh):
+        s = self.shape(cell.shape)
+        dp = dp_axes(mesh)
+        B, L = s.batch, self.spec.seq_len
+        b_ax = dp if B % int(np.prod([mesh.shape[a] for a in dp])) == 0 else None
+        batch = {
+            "hist_items": _sds((B, L), jnp.int32),
+            "hist_cats": _sds((B, L), jnp.int32),
+            "target_item": _sds((B,), jnp.int32),
+            "target_cat": _sds((B,), jnp.int32),
+        }
+        spec = {
+            "hist_items": P(b_ax, None),
+            "hist_cats": P(b_ax, None),
+            "target_item": P(b_ax),
+            "target_cat": P(b_ax),
+        }
+        if cell.kind == "train":
+            batch["label"] = _sds((B,), jnp.float32)
+            spec["label"] = P(b_ax)
+        if cell.kind == "retrieval":
+            batch["cand_ids"] = _sds((B, s.n_candidates), jnp.int32)
+            spec["cand_ids"] = P(None, all_axes(mesh))
+        return (batch,), (spec,)
+
+    # ----------------------------------------------------------------- smoke
+    def smoke_params(self, key):
+        return bst_init(key, self.smoke_spec)
+
+    def smoke_batch(self, key):
+        rng = np.random.default_rng(0)
+        B, L = 8, self.smoke_spec.seq_len
+        return {
+            "hist_items": jnp.asarray(rng.integers(0, self.smoke_spec.n_items, (B, L))),
+            "hist_cats": jnp.asarray(rng.integers(0, self.smoke_spec.n_cats, (B, L))),
+            "target_item": jnp.asarray(rng.integers(0, self.smoke_spec.n_items, B)),
+            "target_cat": jnp.asarray(rng.integers(0, self.smoke_spec.n_cats, B)),
+            "label": jnp.asarray(rng.random(B) < 0.3, jnp.float32),
+        }
+
+    def smoke_loss(self, params, batch):
+        logits = bst_forward(params, batch, self.smoke_spec)
+        lab = batch["label"]
+        return jnp.mean(
+            jnp.maximum(logits, 0) - logits * lab + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+        )

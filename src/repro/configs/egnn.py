@@ -1,0 +1,29 @@
+"""egnn [gnn]: 4 layers, d_hidden=64, E(n)-equivariant [arXiv:2102.09844]."""
+import jax
+import jax.numpy as jnp
+
+from ..models.gnn.egnn import egnn_forward, egnn_init
+from ..models.layers import mlp, mlp_init
+from .base import GNNArch
+
+_FULL = dict(n_layers=4, d_hidden=64)
+_SMOKE = dict(n_layers=2, d_hidden=16)
+
+
+def _init(key, d_in, d_out, full):
+    c = _FULL if full else _SMOKE
+    k1, k2 = jax.random.split(key)
+    return {
+        "body": egnn_init(k1, d_in, c["d_hidden"], c["n_layers"]),
+        "head": mlp_init(k2, (c["d_hidden"], d_out)),
+        "_n_layers": jnp.zeros((c["n_layers"],)),  # static marker
+    }
+
+
+def _forward(params, batch, full, shape_name=None):
+    c = _FULL if full else _SMOKE
+    h, _ = egnn_forward(params["body"], batch, c["n_layers"])
+    return mlp(params["head"], h, dtype=jnp.float32)
+
+
+ARCH = GNNArch("egnn", _init, _forward)

@@ -1,0 +1,65 @@
+"""equiformer-v2 [gnn]: 12 layers, d_hidden=128, l_max=6, m_max=2, 8 heads,
+SO(2)-eSCN convolutions [arXiv:2306.12059].  Huge-edge shapes run the
+edge-chunked online-softmax path; those cells carry a flops correction
+(= n_chunks) because XLA costs scan bodies once."""
+import jax
+import jax.numpy as jnp
+
+from ..models.gnn.equiformer_v2 import EqV2Spec, eqv2_forward, eqv2_init
+from .base import GNNArch, GNN_SHAPES
+
+_FULL = EqV2Spec(n_layers=12, channels=128, l_max=6, m_max=2, n_heads=8, n_rbf=32)
+_SMOKE = EqV2Spec(n_layers=2, channels=8, l_max=2, m_max=1, n_heads=2, n_rbf=8)
+
+# edge chunking per shape: chunks chosen so each chunk is ~2M edges
+_CHUNKS = {"ogb_products": 28, "minibatch_lg": 1, "full_graph_sm": 1, "molecule": 1}
+
+
+def _init(key, d_in, d_out, full):
+    spec = _FULL if full else _SMOKE
+    spec = EqV2Spec(**{**spec.__dict__, "n_species": d_in})
+    return eqv2_init(key, spec, d_out)
+
+
+def _forward(params, batch, full, shape_name=None):
+    spec = _FULL if full else _SMOKE
+    d_in = batch["x"].shape[-1] if batch["x"].ndim == 2 else 32
+    spec = EqV2Spec(**{**spec.__dict__, "n_species": d_in})
+    chunks = _CHUNKS.get(shape_name or "", 1)
+    n_edges = batch["edge_src"].shape[0]
+    while chunks > 1 and (n_edges % chunks or (n_edges // chunks) % 512):
+        chunks -= 1
+    return eqv2_forward(params, batch, spec, edge_chunks=chunks)
+
+
+def _variant(depth):
+    def init_fn(key, d_in, d_out, full):
+        spec = _FULL if full else _SMOKE
+        spec = EqV2Spec(**{**spec.__dict__, "n_species": d_in, "n_layers": depth})
+        return eqv2_init(key, spec, d_out)
+
+    def forward_fn(params, batch, full, shape_name=None):
+        spec = _FULL if full else _SMOKE
+        d_in = batch["x"].shape[-1] if batch["x"].ndim == 2 else 32
+        spec = EqV2Spec(
+            **{**spec.__dict__, "n_species": d_in, "n_layers": depth}
+        )
+        chunks = _CHUNKS.get(shape_name or "", 1)
+        n_edges = batch["edge_src"].shape[0]
+        while chunks > 1 and (n_edges % chunks or (n_edges // chunks) % 512):
+            chunks -= 1
+        return eqv2_forward(params, batch, spec, edge_chunks=chunks)
+
+    return init_fn, forward_fn
+
+
+ARCH = GNNArch(
+    "equiformer-v2",
+    _init,
+    _forward,
+    # edge-chunk scan body costed once -> multiply by n_chunks (HLO approx;
+    # MODEL_FLOPS for this cell is analytic)
+    flops_correction={"ogb_products": 28.0},
+    variant_builder=_variant,
+    depth_full=_FULL.n_layers,
+)

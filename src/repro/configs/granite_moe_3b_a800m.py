@@ -1,0 +1,47 @@
+"""granite-moe-3b-a800m [moe]: 32L d_model=1536 24H (GQA kv=8) vocab=49155
+(padded to 49408 for 16-way vocab sharding), MoE 40 experts top-8,
+d_ff_expert=512 [hf:ibm-granite/granite-3.0-*; hf].
+
+40 % 16 != 0: experts are PADDED to 48 (8 masked dummies the router can
+never select) so the expert axis shards 3-per-device over ``model`` — the
+expert analog of vocab padding.  Non-padded TP-within-expert sharding
+compiled >15 min under SPMD (EXPERIMENTS §Dry-run notes)."""
+from ..models.transformer import LMConfig
+from .base import LMArch
+
+ARCH = LMArch(
+    name="granite-moe-3b-a800m",
+    cfg=LMConfig(
+        name="granite-moe-3b-a800m",
+        n_layers=32,
+        d_model=1536,
+        n_heads=24,
+        n_kv_heads=8,
+        d_ff=0,
+        vocab_size=49408,  # 49155 padded to /256 (sharding divisibility)
+        head_dim=64,
+        moe=True,
+        n_experts=48,  # padded; 40 active
+        n_experts_active=40,
+        n_shared_experts=0,
+        top_k=8,
+        d_ff_expert=512,
+    ),
+    smoke_cfg=LMConfig(
+        name="granite-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=0,
+        vocab_size=512,
+        head_dim=16,
+        moe=True,
+        n_experts=5,
+        top_k=2,
+        d_ff_expert=32,
+        remat=False,
+    ),
+    sub_quadratic=False,
+    ep_divisible=True,  # 48 % 16 == 0 after padding
+)

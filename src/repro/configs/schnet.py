@@ -1,0 +1,29 @@
+"""schnet [gnn]: 3 interactions, d_hidden=64, 300 Gaussian RBFs, 10 A cutoff
+[arXiv:1706.08566].  Feature graphs use x @ embed (soft species)."""
+import jax
+import jax.numpy as jnp
+
+from ..models.gnn.schnet import schnet_forward, schnet_init
+from ..models.layers import mlp, mlp_init
+from .base import GNNArch
+
+_FULL = dict(n_interactions=3, d_hidden=64, n_rbf=300, cutoff=10.0)
+_SMOKE = dict(n_interactions=2, d_hidden=16, n_rbf=16, cutoff=5.0)
+
+
+def _init(key, d_in, d_out, full):
+    c = _FULL if full else _SMOKE
+    k1, k2 = jax.random.split(key)
+    p = schnet_init(k1, d_in, c["d_hidden"], c["n_interactions"], c["n_rbf"])
+    p["out"] = mlp_init(k2, (c["d_hidden"], c["d_hidden"] // 2, d_out))
+    return p
+
+
+def _forward(params, batch, full, shape_name=None):
+    c = _FULL if full else _SMOKE
+    return schnet_forward(
+        params, batch, c["n_interactions"], c["n_rbf"], c["cutoff"]
+    )
+
+
+ARCH = GNNArch("schnet", _init, _forward)

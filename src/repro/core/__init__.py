@@ -1,0 +1,15 @@
+"""GeoLayer core: the paper's contribution (§III-§VI + appendix)."""
+from . import (  # noqa: F401
+    analytics,
+    baselines,
+    cost,
+    dhd,
+    graph,
+    latency,
+    layered_graph,
+    optimal,
+    patterns,
+    placement,
+    routing,
+    store,
+)

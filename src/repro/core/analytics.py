@@ -1,0 +1,210 @@
+"""Offline graph analytics engines (paper §VII workloads) + geo cost simulator.
+
+PageRank / SSSP / HITS / LPA are iterative ``segment_sum``/``segment_min``
+computations in JAX — the same dataflow a Pregel-style geo engine (RAGraph)
+executes, so per-iteration message counts map 1:1 to WAN traffic.  K-core
+uses Batagelj-Zaversnik peeling (control-plane NumPy, like the paper's
+setup where core iterations = max core number).
+
+``simulate_execution`` prices a layout (vertex -> execution site) under the
+paper's BSP model: per iteration, cut edges exchange ``msg_bytes`` messages;
+iteration time = straggler compute + straggler link (Eq. 1); WAN volume
+accumulates cut bytes — the quantities of Figs. 13-14.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import Graph
+from .latency import GeoEnvironment
+
+__all__ = [
+    "pagerank",
+    "sssp",
+    "hits",
+    "label_propagation",
+    "core_decomposition",
+    "ExecStats",
+    "simulate_execution",
+]
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_iters"))
+def pagerank(
+    src: jnp.ndarray, dst: jnp.ndarray, n_nodes: int, n_iters: int = 15, damp: float = 0.85
+) -> jnp.ndarray:
+    deg = jax.ops.segment_sum(jnp.ones_like(src, dtype=jnp.float32), src, n_nodes)
+    deg = jnp.maximum(deg, 1.0)
+    r0 = jnp.full((n_nodes,), 1.0 / n_nodes, dtype=jnp.float32)
+
+    def body(_, r):
+        contrib = r[src] / deg[src]
+        agg = jax.ops.segment_sum(contrib, dst, n_nodes)
+        return (1.0 - damp) / n_nodes + damp * agg
+
+    return jax.lax.fori_loop(0, n_iters, body, r0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_iters"))
+def sssp(
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    weight: jnp.ndarray,
+    source: int,
+    n_nodes: int,
+    n_iters: int = 10,
+) -> jnp.ndarray:
+    inf = jnp.asarray(jnp.inf, dtype=jnp.float32)
+    dist0 = jnp.full((n_nodes,), jnp.inf, dtype=jnp.float32).at[source].set(0.0)
+
+    def body(_, dist):
+        cand = dist[src] + weight
+        relax = jax.ops.segment_min(cand, dst, n_nodes)
+        return jnp.minimum(dist, jnp.where(jnp.isfinite(relax), relax, inf))
+
+    return jax.lax.fori_loop(0, n_iters, body, dist0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_iters"))
+def hits(
+    src: jnp.ndarray, dst: jnp.ndarray, n_nodes: int, n_iters: int = 20
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h0 = jnp.ones((n_nodes,), dtype=jnp.float32)
+    a0 = jnp.ones((n_nodes,), dtype=jnp.float32)
+
+    def body(_, state):
+        h, a = state
+        a = jax.ops.segment_sum(h[src], dst, n_nodes)
+        a = a / jnp.maximum(jnp.linalg.norm(a), 1e-12)
+        h = jax.ops.segment_sum(a[dst], src, n_nodes)
+        h = h / jnp.maximum(jnp.linalg.norm(h), 1e-12)
+        return h, a
+
+    return jax.lax.fori_loop(0, n_iters, body, (h0, a0))
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_iters"))
+def label_propagation(
+    src: jnp.ndarray, dst: jnp.ndarray, n_nodes: int, n_iters: int = 10
+) -> jnp.ndarray:
+    """Min-label propagation (monotone LPA variant used by delta-accumulative
+    engines like Maiter/RAGraph; identical message pattern to classic LPA)."""
+    lab0 = jnp.arange(n_nodes, dtype=jnp.int32)
+
+    def body(_, lab):
+        m1 = jax.ops.segment_min(lab[src], dst, n_nodes)
+        m2 = jax.ops.segment_min(lab[dst], src, n_nodes)
+        return jnp.minimum(lab, jnp.minimum(m1, m2))
+
+    return jax.lax.fori_loop(0, n_iters, body, lab0)
+
+
+def core_decomposition(n_nodes: int, src: np.ndarray, dst: np.ndarray) -> Tuple[np.ndarray, int]:
+    """Batagelj-Zaversnik peeling on the *simple* graph (parallel edges and
+    self-loops dropped — the standard k-core definition).
+    Returns (core numbers, peel rounds)."""
+    a, b = np.minimum(src, dst), np.maximum(src, dst)
+    keep = a != b
+    key = a[keep].astype(np.int64) * n_nodes + b[keep]
+    _, idx = np.unique(key, return_index=True)
+    src = a[keep][idx]
+    dst = b[keep][idx]
+    deg = np.bincount(src, minlength=n_nodes) + np.bincount(dst, minlength=n_nodes)
+    core = np.zeros(n_nodes, dtype=np.int32)
+    alive = np.ones(n_nodes, dtype=bool)
+    cur = deg.astype(np.int64).copy()
+    k = 0
+    rounds = 0
+    while alive.any():
+        k_candidates = cur[alive]
+        k = max(k, int(k_candidates.min()))
+        while True:
+            peel = alive & (cur <= k)
+            if not peel.any():
+                break
+            rounds += 1
+            core[peel] = k
+            alive[peel] = False
+            # decrement neighbor degrees
+            m = peel[src] & alive[dst]
+            np.subtract.at(cur, dst[m], 1)
+            m = peel[dst] & alive[src]
+            np.subtract.at(cur, src[m], 1)
+    return core, rounds
+
+
+# ------------------------------------------------------------ cost simulator
+@dataclasses.dataclass
+class ExecStats:
+    time_s: float
+    wan_bytes: float
+    cut_edges: int
+    n_sites: int
+    per_iter_time_s: float
+
+
+def simulate_execution(
+    env: GeoEnvironment,
+    g: Graph,
+    vertex_site: np.ndarray,  # [n] execution DC per vertex
+    n_iters: int,
+    msg_bytes: float = 16.0,
+    edge_rate: float = 5e7,  # edges/sec processed per DC (compute model)
+    assembly_bytes: float = 0.0,
+) -> ExecStats:
+    """BSP execution model over a geo layout (used for Figs. 13-15).
+
+    Per superstep: every cut edge ships one ``msg_bytes`` message; link time
+    follows Eq. 1 aggregated per DC pair; iteration time = straggler
+    (max compute + max link) — the paper's bottleneck model (§III-A).
+    """
+    site_s = vertex_site[g.src]
+    site_d = vertex_site[g.dst]
+    cut = site_s != site_d
+    cut_edges = int(cut.sum())
+    sites = np.unique(vertex_site[vertex_site >= 0])
+    # per-pair message volume
+    pair_bytes: Dict[Tuple[int, int], float] = {}
+    if cut_edges:
+        pairs, counts = np.unique(
+            np.stack([site_s[cut], site_d[cut]], axis=1), axis=0, return_counts=True
+        )
+        for (a, b), c in zip(pairs, counts):
+            pair_bytes[(int(a), int(b))] = float(c) * msg_bytes
+    link_t = 0.0
+    for (a, b), v in pair_bytes.items():
+        link_t = max(link_t, env.rtt_s[a, b] / 2.0 + v / env.bw_Bps[a, b])
+    # straggler compute: max local edges per site
+    comp_t = 0.0
+    for s in sites:
+        local_edges = int(((site_s == s) & (site_d == s)).sum()) + int(
+            ((site_s == s) ^ (site_d == s)).sum()
+        )
+        comp_t = max(comp_t, local_edges / edge_rate)
+    per_iter = comp_t + link_t
+    wan = n_iters * sum(pair_bytes.values()) + assembly_bytes
+    return ExecStats(
+        time_s=n_iters * per_iter + assembly_bytes / _min_bw(env, sites),
+        wan_bytes=wan,
+        cut_edges=cut_edges,
+        n_sites=len(sites),
+        per_iter_time_s=per_iter,
+    )
+
+
+def _min_bw(env: GeoEnvironment, sites: np.ndarray) -> float:
+    if len(sites) < 2:
+        return float("inf")
+    vals = [
+        env.bw_Bps[a, b]
+        for a in sites
+        for b in sites
+        if a != b and np.isfinite(env.bw_Bps[a, b])
+    ]
+    return float(min(vals)) if vals else float("inf")

@@ -1,0 +1,439 @@
+"""Overlap-centric replica placement (paper §V, Algorithms 1-3, Eq. 13).
+
+Flow (level-synchronous rendering of Algorithms 1+2):
+
+1. **Sinking** (Alg. 1): each pattern enters the layer whose latency interval
+   contains its SLO ``eta_p * Gamma_max`` — edges above that layer are too slow
+   to cross at serve time, so the pattern is held independently by every
+   requesting bridge subgraph (BS) of its target layer.
+2. **Per layer k = h..1** (Alg. 2):
+   * Phase 1 — every unit held by a BS is tested with the replication gain
+     (Eq. 13): gain >= 0 -> full replication into all requesting child BSs
+     (one layer down); gain < 0 -> deferred to the cluster's decomposition
+     pool.
+   * Phase 2 — each pool is split into disjoint overlap regions (Venn cells);
+     per region: gain > 0 -> replicate across the cluster's requesting BSs,
+     else a **DHD competition** (paper Fig. 4b): each candidate BS seeds heat
+     at its current holdings, diffuses over the region graph, and the region
+     goes to the BS whose heat reaches it strongest (frequency fallback).
+   * Units that reach layer 0 are deposited as replicas in the DCs.
+3. **Pre-caching** (§V) — steady-state DHD over the whole graph identifies
+   high-heat vertices (>= theta quantile) cached at every non-owning DC.
+4. **Eviction** (Alg. 3) — online heat tracking; items whose diffused heat
+   falls below ``theta_c`` are evicted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import dhd
+from .cost import PlacementState
+from .graph import Graph
+from .latency import GeoEnvironment
+from .layered_graph import BridgeSubgraph, LayeredGraph
+from .patterns import (
+    OverlapRegion,
+    Pattern,
+    Workload,
+    decompose_overlap_regions,
+    region_adjacency,
+)
+
+__all__ = [
+    "PlacedUnit",
+    "PlacementConfig",
+    "replication_gain",
+    "overlap_centric_placement",
+    "precache_hot_regions",
+    "HeatCache",
+]
+
+
+@dataclasses.dataclass
+class PlacedUnit:
+    """A pattern or overlap region flowing down the layered graph."""
+
+    items: np.ndarray
+    r_py: np.ndarray  # [D]
+    w_py: np.ndarray  # [D]
+    eta: float
+    key: Tuple[int, ...]  # source pattern ids (region identity)
+
+    @staticmethod
+    def from_pattern(p: Pattern) -> "PlacedUnit":
+        return PlacedUnit(
+            items=p.items, r_py=p.r_py, w_py=p.w_py, eta=p.eta, key=(p.pid,)
+        )
+
+
+@dataclasses.dataclass
+class PlacementConfig:
+    gamma_max_s: float = 0.5  # latency SLO upper bound (paper: 500 ms fraud)
+    lambda1: float = 0.5
+    lambda2: float = 0.5
+    dhd: dhd.DHDParams = dataclasses.field(default_factory=dhd.DHDParams)
+    dhd_steps: int = 32
+    precache: bool = True
+    theta_quantile: float = 0.55  # paper Fig. 12: 50-60% is near-optimal
+    precache_max_per_dc: int = 4096
+
+
+# ------------------------------------------------------------------ Eq. (13)
+def replication_gain(
+    unit: PlacedUnit,
+    holder_dcs: np.ndarray,
+    children_dcs: List[np.ndarray],
+    sizes: np.ndarray,
+    env: GeoEnvironment,
+    lambda1: float = 0.5,
+    primary: Optional[np.ndarray] = None,
+) -> float:
+    """Surrogate replication gain (Eq. 13) of fully replicating ``unit``
+    into each requesting child region.
+
+    gain = dC^R (cross-reads become local) + dC^A (lambda1 * eliminated
+    cross-BS routings) - dC^S (added storage) - dC^W (added sync).
+    Prices are averaged over the concrete DC pairs involved, so the surrogate
+    tracks the real cost model's geometry (cluster-local, Appendix D).
+    """
+    items = unit.items
+    size_sum = float(sizes[items].sum())
+    n_items = len(items)
+    holder_set = set(int(d) for d in holder_dcs)
+    gain = 0.0
+    for child in children_dcs:
+        child_list = [int(d) for d in child]
+        r_c = float(unit.r_py[child].sum())
+        if r_c <= 0:
+            continue
+        # reads of items whose primary already sits in the child region are
+        # local without a replica — only *remote* bytes produce savings
+        # (without this the surrogate over-replicates write-heavy patterns;
+        # measured: Fig. 9 optimality gap 20.7% -> see bench_output)
+        if primary is not None:
+            remote = ~np.isin(primary[items], child)
+            size_remote = float(sizes[items[remote]].sum())
+        else:
+            size_remote = size_sum
+        w_total = float(unit.w_py.sum())
+        outside = [d for d in holder_set if d not in child_list] or list(holder_set)
+        # mean $/byte of the cross-cluster paths this replication removes
+        net_mean = float(np.mean([[env.c_net[o, c] for o in outside] for c in child_list]))
+        store_mean = float(np.mean([env.c_store[c] for c in child_list]))
+        put_mean = float(np.mean([env.c_write[c] for c in child_list]))
+        read_save = r_c * size_remote * net_mean
+        assoc_save = lambda1 * r_c * n_items * 1e-6  # assoc unit ~ per-M GETs
+        store_add = size_sum * store_mean
+        write_add = w_total * (put_mean * n_items + size_remote * net_mean)
+        gain += read_save + assoc_save - store_add - write_add
+    return gain
+
+
+# ----------------------------------------------------------- DHD competition
+def _dhd_competition(
+    region: OverlapRegion,
+    candidates: List[Tuple[int, np.ndarray, List[np.ndarray]]],
+    all_regions: Sequence[OverlapRegion],
+    g: Graph,
+    params: dhd.DHDParams,
+    n_steps: int,
+    unit_r: np.ndarray,
+) -> int:
+    """Pick the winning candidate (index into ``candidates``) for ``region``.
+
+    ``candidates`` entries are (bs_index, dcs, held_item_arrays).  Each
+    candidate seeds heat at a super-node representing its current holdings
+    connected to the candidate regions by graph-edge counts (Fig. 4b); the
+    region goes to the candidate whose diffused heat at it is largest.
+    Fallback: total access frequency of the candidate's DCs for the region.
+    """
+    n_regions = len(all_regions)
+    rsrc, rdst, rw = region_adjacency(all_regions, g)
+    item_region = np.full(g.n_items, -1, dtype=np.int64)
+    for r in all_regions:
+        item_region[r.items] = r.rid
+    scores = []
+    for (_, dcs, held_items) in candidates:
+        if held_items:
+            held = np.unique(np.concatenate(held_items))
+        else:
+            held = np.zeros(0, dtype=np.int64)
+        if len(held) == 0 or len(rsrc) == 0:
+            scores.append(-1.0)
+            continue
+        # connect the holdings super-node (id = n_regions) to regions that
+        # share graph edges with the held items
+        held_mask = np.zeros(g.n_items, dtype=bool)
+        held_mask[held] = True
+        touch_src = held_mask[g.src] & (item_region[g.dst] >= 0)
+        touch_dst = held_mask[g.dst] & (item_region[g.src] >= 0)
+        extra: Dict[int, float] = {}
+        for rid in item_region[g.dst[touch_src]]:
+            extra[int(rid)] = extra.get(int(rid), 0.0) + 1.0
+        for rid in item_region[g.src[touch_dst]]:
+            extra[int(rid)] = extra.get(int(rid), 0.0) + 1.0
+        if not extra:
+            scores.append(-1.0)
+            continue
+        esrc = np.array([n_regions] * len(extra), dtype=np.int64)
+        edst = np.array(list(extra.keys()), dtype=np.int64)
+        ew = np.array(list(extra.values()), dtype=np.float32)
+        seed = np.zeros(n_regions + 1, dtype=np.float32)
+        seed[n_regions] = 1.0
+        heat = dhd.diffuse_affinity(
+            n_regions + 1,
+            np.concatenate([rsrc, esrc]),
+            np.concatenate([rdst, edst]),
+            np.concatenate([rw, ew]),
+            seed,
+            params=params,
+            n_steps=n_steps,
+        )
+        scores.append(float(heat[region.rid]))
+    scores_arr = np.asarray(scores)
+    if scores_arr.max() > 0:
+        return int(scores_arr.argmax())
+    # unreachable by heat -> frequency of the candidate DCs for this region
+    freq = [float(unit_r[dcs].sum()) for (_, dcs, _) in candidates]
+    return int(np.asarray(freq).argmax())
+
+
+# ------------------------------------------------------- main placement flow
+def overlap_centric_placement(
+    lg: LayeredGraph,
+    workload: Workload,
+    config: Optional[PlacementConfig] = None,
+) -> Tuple[PlacementState, Dict[str, object]]:
+    """Algorithms 1 + 2 end-to-end.  Returns (placement state, stats)."""
+    cfg = config or PlacementConfig()
+    g, env = lg.g, lg.env
+    sizes = g.item_size()
+    D = env.n_dcs
+    state = PlacementState.empty(g.n_items, D)
+
+    # primary copies: each vertex at its partition DC, each edge at src's DC
+    state.delta[np.arange(g.n_nodes), g.partition] = True
+    state.delta[g.n_nodes + np.arange(g.n_edges), g.partition[g.src]] = True
+    primary = np.concatenate([g.partition, g.partition[g.src]]).astype(np.int64)
+
+    # holdings[k][id] -> list of units.  At k>0 id = bs_id; at k=0 id = dc.
+    h = lg.n_layers
+    holdings: List[Dict[int, List[PlacedUnit]]] = [dict() for _ in range(h + 1)]
+    pools: List[Dict[int, List[Tuple[int, PlacedUnit]]]] = [dict() for _ in range(h + 1)]
+    stats = dict(replicated=0, decomposed=0, regions=0, competitions=0, skipped_w=0)
+
+    def requesting_dcs(unit: PlacedUnit, dcs: np.ndarray) -> np.ndarray:
+        return dcs[unit.r_py[dcs] > 0]
+
+    # ---- Alg. 1: sink each pattern to its target layer -------------------
+    for p in workload.patterns:
+        if p.read_rate <= p.write_rate:  # Alg. 2 precondition R > W
+            stats["skipped_w"] += 1
+            continue
+        unit = PlacedUnit.from_pattern(p)
+        k_star = lg.layer_for_latency(p.eta * cfg.gamma_max_s)
+        placed = False
+        for b in lg.layers[k_star]:
+            if len(requesting_dcs(unit, b.dcs)):
+                holdings[k_star].setdefault(b.bs_id, []).append(unit)
+                placed = True
+        if not placed:  # requesting DC isolated at this layer -> direct deposit
+            for dc in np.where(p.r_py > 0)[0]:
+                holdings[0].setdefault(int(dc), []).append(unit)
+
+    # ---- Alg. 2: layer-by-layer placement --------------------------------
+    for k in range(h, 0, -1):
+        # Phase 1: replication-vs-decomposition per held unit
+        for bs_id, units in list(holdings[k].items()):
+            b = lg.bs(bs_id)
+            children = lg.bs_children(b)
+            for unit in units:
+                if k == 1 or not children:
+                    # children are the DCs of this BS's cluster
+                    child_dcs = [np.asarray([int(d)]) for d in b.dcs
+                                 if unit.r_py[int(d)] > 0]
+                    child_ids = [int(d) for d in b.dcs if unit.r_py[int(d)] > 0]
+                    to_layer = 0
+                else:
+                    kids = [c for c in children if len(requesting_dcs(unit, c.dcs))]
+                    child_dcs = [c.dcs for c in kids]
+                    child_ids = [c.bs_id for c in kids]
+                    to_layer = k - 1
+                if not child_ids:
+                    continue
+                gain = replication_gain(
+                    unit, b.dcs, child_dcs, sizes, env, cfg.lambda1, primary
+                )
+                if gain >= 0:
+                    stats["replicated"] += 1
+                    for cid in child_ids:
+                        holdings[to_layer].setdefault(cid, []).append(unit)
+                else:
+                    stats["decomposed"] += 1
+                    pools[k].setdefault(b.comp, []).append((bs_id, unit))
+        holdings[k].clear()
+
+        # Phase 2: overlap-region allocation within each cluster
+        for comp, entries in list(pools[k].items()):
+            units = [u for (_, u) in entries]
+            pseudo = [
+                Pattern(pid=i, items=u.items, r_py=u.r_py, w_py=u.w_py, eta=u.eta)
+                for i, u in enumerate(units)
+            ]
+            regions = decompose_overlap_regions(pseudo, g.n_items)
+            stats["regions"] += len(regions)
+            b_holder = next(bb for bb in lg.layers[k] if bb.comp == comp)
+            children = lg.bs_children(b_holder)
+            if k == 1 or not children:
+                cand = [
+                    (int(d), np.asarray([int(d)]), [u.items for u in holdings[0].get(int(d), [])])
+                    for d in b_holder.dcs
+                ]
+                to_layer = 0
+            else:
+                cand = [
+                    (c.bs_id, c.dcs, [u.items for u in holdings[k - 1].get(c.bs_id, [])])
+                    for c in children
+                ]
+                to_layer = k - 1
+            for region in regions:
+                pids = region.key
+                r_py = np.sum([units[i].r_py for i in pids], axis=0)
+                w_py = np.sum([units[i].w_py for i in pids], axis=0)
+                runit = PlacedUnit(
+                    items=region.items, r_py=r_py, w_py=w_py,
+                    eta=min(units[i].eta for i in pids),
+                    key=tuple(sorted(set(sum((units[i].key for i in pids), ())))),
+                )
+                req = [
+                    (cid, dcs, held) for (cid, dcs, held) in cand
+                    if r_py[dcs].sum() > 0
+                ]
+                if not req:
+                    continue
+                gain = replication_gain(
+                    runit, b_holder.dcs, [d for (_, d, _) in req], sizes, env,
+                    cfg.lambda1, primary,
+                )
+                if gain > 0:
+                    stats["replicated"] += 1
+                    targets = [cid for (cid, _, _) in req]
+                else:
+                    stats["competitions"] += 1
+                    win = _dhd_competition(
+                        region, req, regions, g, cfg.dhd, cfg.dhd_steps, r_py
+                    )
+                    targets = [req[win][0]]
+                for cid in targets:
+                    holdings[to_layer].setdefault(cid, []).append(runit)
+            pools[k].pop(comp)
+
+    # ---- deposit layer-0 holdings as replicas -----------------------------
+    for dc, units in holdings[0].items():
+        for u in units:
+            state.delta[u.items, int(dc)] = True
+
+    # ---- Phase 3: pre-caching (paper §V) ----------------------------------
+    if cfg.precache:
+        precache_hot_regions(
+            g, workload, state, cfg.theta_quantile, cfg.dhd,
+            max_per_dc=cfg.precache_max_per_dc,
+        )
+
+    state.route_nearest(env, sizes)
+    return state, stats
+
+
+# ----------------------------------------------------------------- pre-cache
+def precache_hot_regions(
+    g: Graph,
+    workload: Workload,
+    state: PlacementState,
+    theta_quantile: float = 0.55,
+    params: dhd.DHDParams = dhd.DHDParams(),
+    n_steps: int = 48,
+    max_per_dc: int = 4096,
+) -> np.ndarray:
+    """Steady-state DHD over the whole graph; cache vertices whose equilibrium
+    heat is >= the ``theta_quantile`` of the heat distribution at every DC
+    that does not own them (bounded by ``max_per_dc``).  Returns hot-vertex ids.
+    """
+    r_v = workload.r_xy[: g.n_nodes].sum(axis=1).astype(np.float32)
+    if r_v.max() <= 0:
+        return np.zeros(0, dtype=np.int64)
+    heat0 = r_v / r_v.max()
+    theta = float(np.quantile(heat0[heat0 > 0], theta_quantile)) if (heat0 > 0).any() else 0.0
+    sources = heat0 >= theta
+    q0 = np.where(sources, 1.0 / max(sources.sum(), 1), 0.0).astype(np.float32)
+    w_e = workload.r_xy[g.n_nodes :].sum(axis=1).astype(np.float32)
+    w_e = w_e / max(w_e.max(), 1.0) + 1e-3
+    heat = dhd.diffuse_affinity(
+        g.n_nodes, g.src, g.dst, w_e, q0, base_heat=heat0, params=params, n_steps=n_steps
+    )
+    theta_star = float(np.quantile(heat, theta_quantile))
+    hot = np.where(heat >= theta_star)[0]
+    if len(hot) > max_per_dc:
+        hot = hot[np.argsort(-heat[hot])[:max_per_dc]]
+    for d in range(state.delta.shape[1]):
+        ext = hot[g.partition[hot] != d]
+        state.delta[ext, d] = True
+    return hot
+
+
+# ------------------------------------------------------------------ eviction
+class HeatCache:
+    """Online replica eviction (Alg. 3): heat-tracked cache per DC."""
+
+    def __init__(
+        self,
+        g: Graph,
+        dc: int,
+        state: PlacementState,
+        params: dhd.DHDParams = dhd.DHDParams(),
+        theta_c: float = 0.05,
+    ) -> None:
+        self.g = g
+        self.dc = dc
+        self.state = state
+        self.params = params
+        self.theta_c = theta_c
+        self.heat = np.zeros(g.n_items, dtype=np.float32)
+
+    def cached_mask(self) -> np.ndarray:
+        """Replicas held at this DC beyond the primary partition copy."""
+        primary = np.zeros(self.g.n_items, dtype=bool)
+        primary[: self.g.n_nodes] = self.g.partition == self.dc
+        primary[self.g.n_nodes :] = self.g.partition[self.g.src] == self.dc
+        return self.state.delta[:, self.dc] & ~primary
+
+    def observe(self, item_ids: np.ndarray, freq: float = 1.0) -> None:
+        """External heat injection: one access event batch (Alg. 3 lines 3-5)."""
+        self.heat[np.asarray(item_ids)] += freq
+
+    def step(self, n_steps: int = 4) -> None:
+        """Diffuse heat over the cache topology (vertex items only)."""
+        n = self.g.n_nodes
+        h = dhd.diffuse_affinity(
+            n,
+            self.g.src,
+            self.g.dst,
+            np.ones(self.g.n_edges, dtype=np.float32),
+            self.heat[:n],
+            params=self.params,
+            n_steps=n_steps,
+        )
+        self.heat[:n] = h
+        self.heat[n:] *= (1.0 - self.params.gamma) ** n_steps
+
+    def evict(self) -> np.ndarray:
+        """Remove cold replicas; returns evicted item ids (Alg. 3 lines 7-10).
+
+        The caller (``GeoGraphStore.maintain``) refreshes the routing table
+        after eviction, matching Alg. 3 line 10."""
+        cold = self.cached_mask() & (self.heat < self.theta_c)
+        ids = np.where(cold)[0]
+        self.state.delta[ids, self.dc] = False
+        return ids

@@ -1,0 +1,227 @@
+"""Stepwise layered routing (paper §VI).
+
+Online mode — bottom-up expanding retrieval: serve locally, then per layer
+(ascending latency) greedily pick the cluster DC covering the most missing
+items (minimizing participating DCs), escalating until the pattern is fully
+resolved.
+
+Offline mode — top-down localization (map required items to candidate
+replica holders) then bottom-up assembly: each DC is tested with the
+migration condition (Eq. 14); excluded DCs' data is redistributed by hashing
+to retained DCs within the same cluster, escalating upward when a cluster
+retains nobody.  The result is an execution layout for geo-distributed
+analytics (few sites, minimal WAN).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cost import PlacementState
+from .graph import Graph
+from .latency import GeoEnvironment
+from .layered_graph import LayeredGraph
+
+__all__ = ["RouteResult", "route_online", "OfflineLayout", "route_offline"]
+
+
+# ------------------------------------------------------------------- online
+@dataclasses.dataclass
+class RouteResult:
+    served_by: np.ndarray  # [len(items)] serving DC per item (-1 unresolved)
+    dcs: np.ndarray  # distinct participating DCs
+    latency_s: float  # straggler latency (max over DCs, Eq. 1)
+    per_dc_latency: Dict[int, float]
+    layers_used: int
+    n_missing: int
+
+
+def route_online(
+    lg: LayeredGraph,
+    state: PlacementState,
+    items: np.ndarray,
+    origin: int,
+    sizes: Optional[np.ndarray] = None,
+) -> RouteResult:
+    """Bottom-up expanding retrieval for one pattern request (paper Fig. 5)."""
+    env = lg.env
+    if sizes is None:
+        sizes = lg.g.item_size()
+    items = np.asarray(items)
+    served = np.full(len(items), -1, dtype=np.int64)
+
+    # Layer_0: local items first
+    local = state.delta[items, origin]
+    served[local] = origin
+    layers_used = 0
+
+    for layer in range(1, lg.n_layers + 1):
+        if (served >= 0).all():
+            break
+        comp = lg.comp_of_dc[layer, origin]
+        cluster = np.where(lg.comp_of_dc[layer] == comp)[0]
+        cluster = cluster[cluster != origin]
+        if len(cluster) == 0:
+            continue
+        layers_used = layer
+        # greedy max-coverage within the latency-homogeneous cluster
+        while True:
+            missing = np.where(served < 0)[0]
+            if len(missing) == 0:
+                break
+            cover = state.delta[items[missing]][:, cluster].sum(axis=0)
+            best = int(cover.argmax())
+            if cover[best] == 0:
+                break  # escalate to the next layer
+            dc = int(cluster[best])
+            hit = missing[state.delta[items[missing], dc]]
+            served[hit] = dc
+    # resolved latency per participating DC (Eq. 1 with S_d = served bytes)
+    per_dc: Dict[int, float] = {}
+    for dc in np.unique(served[served >= 0]):
+        s_d = float(sizes[items[served == dc]].sum())
+        per_dc[int(dc)] = env.request_latency(int(dc), origin, s_d)
+    lat = max(per_dc.values()) if per_dc else 0.0
+    return RouteResult(
+        served_by=served,
+        dcs=np.unique(served[served >= 0]),
+        latency_s=lat,
+        per_dc_latency=per_dc,
+        layers_used=layers_used,
+        n_missing=int((served < 0).sum()),
+    )
+
+
+# ------------------------------------------------------------------ offline
+@dataclasses.dataclass
+class OfflineLayout:
+    sites: np.ndarray  # retained execution DCs
+    item_site: np.ndarray  # [I] executing DC per required item (-1 = n/a)
+    migrated: np.ndarray  # item ids moved off their primary DC
+    wan_bytes: float  # assembly traffic
+    excluded: np.ndarray  # DCs ruled out by Eq. 14
+
+
+def _boundary_vertices(g: Graph, dc: int) -> int:
+    src_dc = g.partition[g.src]
+    dst_dc = g.partition[g.dst]
+    cross = src_dc != dst_dc
+    b = np.unique(
+        np.concatenate([g.src[cross & (src_dc == dc)], g.dst[cross & (dst_dc == dc)]])
+    )
+    return int(len(b))
+
+
+def route_offline(
+    lg: LayeredGraph,
+    state: PlacementState,
+    required_items: np.ndarray,
+    n_iters: int = 15,
+    msg_bytes: float = 16.0,
+    xi_frac: float = 0.2,
+) -> OfflineLayout:
+    """Top-down localization + bottom-up assembly (paper Fig. 6, Eq. 14)."""
+    g, env = lg.g, lg.env
+    D = env.n_dcs
+    sizes = g.item_size()
+    required_items = np.asarray(required_items)
+    req_mask = np.zeros(g.n_items, dtype=bool)
+    req_mask[required_items] = True
+
+    # --- top-down localization: candidate holders per required item -------
+    # (delta already encodes all replicas; localization = restricting to it.)
+    primary = np.zeros(g.n_items, dtype=np.int64)
+    primary[: g.n_nodes] = g.partition
+    primary[g.n_nodes :] = g.partition[g.src]
+
+    # --- Eq. 14 migration test per DC --------------------------------------
+    total_boundary = sum(_boundary_vertices(g, d) for d in range(D))
+    xi = xi_frac * n_iters * msg_bytes * max(total_boundary, 1)
+    eta_l = lg.eta_L(1)
+    retained: List[int] = []
+    excluded: List[int] = []
+    for d in range(D):
+        local_req = required_items[primary[required_items] == d]
+        if len(local_req) == 0:
+            excluded.append(d)
+            continue
+        vert_req = local_req[local_req < g.n_nodes]
+        replicas_at_d = int(
+            (state.delta[vert_req, d] & (g.partition[vert_req] != d)).sum()
+        )
+        n_bs = _boundary_vertices(g, d)
+        comm_proxy = n_iters * msg_bytes * (replicas_at_d + n_bs)
+        local_size = float(sizes[local_req].sum())
+        if comm_proxy - local_size > (1.0 - eta_l) * xi:
+            excluded.append(d)
+        else:
+            retained.append(d)
+    if not retained:  # degenerate: keep the DC with the most local data
+        vols = [
+            float(sizes[required_items[primary[required_items] == d]].sum())
+            for d in range(D)
+        ]
+        retained = [int(np.argmax(vols))]
+        excluded = [d for d in range(D) if d != retained[0]]
+
+    retained_arr = np.asarray(sorted(retained))
+    # --- bottom-up assembly -------------------------------------------------
+    item_site = np.full(g.n_items, -1, dtype=np.int64)
+    load = {int(d): 0.0 for d in retained}
+    wan_bytes = 0.0
+    migrated: List[np.ndarray] = []
+
+    own = primary[required_items]
+    keep = np.isin(own, retained_arr)
+    # in-place: items whose primary DC is retained execute there
+    item_site[required_items[keep]] = own[keep]
+    for d in retained:
+        load[d] += float(sizes[required_items[keep][own[keep] == d]].sum())
+
+    # replica reuse: a displaced item already replicated at a retained DC
+    pending = required_items[~keep]
+    if len(pending):
+        rep = state.delta[pending][:, retained_arr]
+        has_rep = rep.any(axis=1)
+        choice = retained_arr[np.argmax(rep, axis=1)]
+        reuse = pending[has_rep]
+        item_site[reuse] = choice[has_rep]
+        pending = pending[~has_rep]
+
+    # remaining items migrate: hash to retained DCs within the smallest
+    # enclosing cluster, escalating per layer (Fig. 6 bottom-up)
+    if len(pending):
+        for x in pending.tolist():
+            home = int(primary[x])
+            dest = -1
+            for layer in range(1, lg.n_layers + 1):
+                comp = lg.comp_of_dc[layer, home]
+                cluster = np.where(lg.comp_of_dc[layer] == comp)[0]
+                cands = [int(d) for d in cluster if d in load]
+                if cands:
+                    # minimize comm cost, tie-break on current load balance
+                    costs = [
+                        (env.c_net[home, d] * sizes[x] + 1e-12 * load[d], d)
+                        for d in cands
+                    ]
+                    dest = min(costs)[1]
+                    break
+            if dest < 0:
+                dest = int(retained_arr[0])
+            item_site[x] = dest
+            load[dest] += float(sizes[x])
+            wan_bytes += float(sizes[x])
+        migrated.append(pending)
+
+    migrated_arr = (
+        np.concatenate(migrated) if migrated else np.zeros(0, dtype=np.int64)
+    )
+    return OfflineLayout(
+        sites=retained_arr,
+        item_site=item_site,
+        migrated=migrated_arr,
+        wan_bytes=wan_bytes,
+        excluded=np.asarray(sorted(excluded)),
+    )

@@ -1,0 +1,198 @@
+"""GeoGraphStore — the public facade of the GeoLayer system.
+
+Ties together: layered-graph construction (§IV), overlap-centric replica
+placement (§V), stepwise routing (§VI), cost accounting (§III) and the
+update-maintenance strategy (§V "Update Maintenance"): periodic refresh from
+access logs + incremental delete cleanup + heat-based eviction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import baselines
+from .cost import CostBreakdown, PlacementState, check_constraints, total_cost
+from .graph import Graph, build_csr
+from .latency import GeoEnvironment
+from .layered_graph import LayeredGraph, build_layered_graph
+from .patterns import Pattern, Workload
+from .placement import HeatCache, PlacementConfig, overlap_centric_placement
+from .routing import OfflineLayout, RouteResult, route_offline, route_online
+
+__all__ = ["GeoGraphStore", "StoreStats"]
+
+
+@dataclasses.dataclass
+class StoreStats:
+    placement_stats: Dict[str, object]
+    build_time_s: float
+    placement_time_s: float
+
+
+class GeoGraphStore:
+    """Geo-distributed graph store with GeoLayer placement + routing.
+
+    Strategy knobs allow the ablation grid of paper Fig. 16:
+      placement in {"geolayer", "random", "top", "adp", "dcd"},
+      routing   in {"stepwise", "random", "greedy"}.
+    """
+
+    def __init__(
+        self,
+        g: Graph,
+        env: GeoEnvironment,
+        workload: Workload,
+        config: Optional[PlacementConfig] = None,
+        placement: str = "geolayer",
+        routing: str = "stepwise",
+        latency_interval_s: float = 0.100,
+        seed: int = 0,
+    ) -> None:
+        self.g = g
+        self.env = env
+        self.workload = workload
+        self.config = config or PlacementConfig()
+        self.placement_name = placement
+        self.routing_name = routing
+        t0 = time.perf_counter()
+        self.lg: LayeredGraph = build_layered_graph(
+            g, env, latency_interval_s=latency_interval_s
+        )
+        t1 = time.perf_counter()
+        self.state, pstats = self._place(placement, seed)
+        t2 = time.perf_counter()
+        self._apply_routing(routing, seed)
+        self.caches = {
+            d: HeatCache(g, d, self.state, self.config.dhd) for d in range(env.n_dcs)
+        }
+        self.stats = StoreStats(
+            placement_stats=pstats,
+            build_time_s=t1 - t0,
+            placement_time_s=t2 - t1,
+        )
+
+    # ------------------------------------------------------------ strategies
+    def _place(self, name: str, seed: int) -> Tuple[PlacementState, Dict]:
+        if name == "geolayer":
+            return overlap_centric_placement(self.lg, self.workload, self.config)
+        if name == "random":
+            return (
+                baselines.place_random_k(self.g, self.workload, self.env, seed=seed),
+                {"baseline": "random-3"},
+            )
+        if name == "top":
+            return (
+                baselines.place_top_k(self.g, self.workload, self.env),
+                {"baseline": "top-3"},
+            )
+        if name == "adp":
+            return (
+                baselines.place_adp(self.g, self.workload, self.env),
+                {"baseline": "adp"},
+            )
+        if name == "dcd":
+            return (
+                baselines.place_dcd(self.g, self.workload, self.env),
+                {"baseline": "dcd"},
+            )
+        raise ValueError(f"unknown placement {name!r}")
+
+    def _apply_routing(self, name: str, seed: int) -> None:
+        if name == "stepwise":
+            # per-item table seeded nearest; pattern requests use route_online
+            self.state.route_nearest(self.env, self.g.item_size())
+        elif name == "random":
+            baselines.route_random(self.state, self.workload, self.env, seed=seed)
+        elif name == "greedy":
+            baselines.route_greedy_set_cover(self.state, self.workload, self.env)
+        else:
+            raise ValueError(f"unknown routing {name!r}")
+
+    # -------------------------------------------------------------- serving
+    def serve_online(self, pattern: Pattern, origin: int) -> RouteResult:
+        """Serve one online pattern request; returns the routing outcome."""
+        if self.routing_name == "stepwise":
+            res = route_online(self.lg, self.state, pattern.items, origin)
+        else:
+            res = self._route_by_table(pattern.items, origin)
+        # record accesses into the origin's heat cache (Alg. 3 injection)
+        self.caches[origin].observe(pattern.items, freq=1.0)
+        return res
+
+    def _route_by_table(self, items: np.ndarray, origin: int) -> RouteResult:
+        sizes = self.g.item_size()
+        served = self.state.route[items, origin].astype(np.int64)
+        per_dc: Dict[int, float] = {}
+        for dc in np.unique(served[served >= 0]):
+            s_d = float(sizes[items[served == dc]].sum())
+            per_dc[int(dc)] = self.env.request_latency(int(dc), origin, s_d)
+        return RouteResult(
+            served_by=served,
+            dcs=np.unique(served[served >= 0]),
+            latency_s=max(per_dc.values()) if per_dc else 0.0,
+            per_dc_latency=per_dc,
+            layers_used=0,
+            n_missing=int((served < 0).sum()),
+        )
+
+    def plan_offline(
+        self, required_items: np.ndarray, n_iters: int = 15, msg_bytes: float = 16.0
+    ) -> OfflineLayout:
+        return route_offline(
+            self.lg, self.state, required_items, n_iters=n_iters, msg_bytes=msg_bytes
+        )
+
+    # ---------------------------------------------------------- maintenance
+    def maintain(self, evict: bool = True, diffusion_steps: int = 4) -> Dict[str, int]:
+        """Periodic maintenance: heat diffusion + cold-replica eviction
+        (Alg. 3) and routing-table refresh."""
+        evicted = 0
+        for cache in self.caches.values():
+            cache.step(n_steps=diffusion_steps)
+            if evict:
+                evicted += len(cache.evict())
+        self.state.route_nearest(self.env, self.g.item_size())
+        return {"evicted": evicted}
+
+    def delete_items(self, item_ids: np.ndarray) -> None:
+        """Bottom-up delete cleanup: drop all replicas everywhere (§V)."""
+        self.state.delta[np.asarray(item_ids)] = False
+        self.state.route[np.asarray(item_ids)] = -1
+
+    def insert_patterns(self, new_patterns: Sequence[Pattern]) -> None:
+        """Incremental update: materialize new access patterns and re-run
+        placement for them (periodic refresh path of §V)."""
+        self.workload = Workload.from_patterns(
+            list(self.workload.patterns) + list(new_patterns),
+            self.workload.n_items,
+            self.workload.n_dcs,
+        )
+        self.state, pstats = self._place(self.placement_name, seed=0)
+        self._apply_routing(self.routing_name, seed=0)
+        self.stats.placement_stats = pstats
+
+    # -------------------------------------------------------------- costing
+    def cost(self) -> CostBreakdown:
+        return total_cost(
+            self.workload.patterns,
+            self.state,
+            self.workload.r_xy,
+            self.workload.w_xy,
+            self.g.item_size(),
+            self.env,
+            self.config.lambda1,
+            self.config.lambda2,
+        )
+
+    def constraints(self, gamma_max_s: Optional[float] = None) -> Dict[str, bool]:
+        return check_constraints(
+            self.workload.patterns,
+            self.state,
+            self.workload.r_xy,
+            self.g.item_size(),
+            self.env,
+            gamma_max_s or self.config.gamma_max_s,
+        )

@@ -1,0 +1,1 @@
+from . import collectives, compression, fault, geo_sharding, sharding  # noqa: F401

@@ -1,0 +1,20 @@
+"""Small collective helpers used by shard_map'd regions."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pmean_tree", "all_to_all_tokens"]
+
+
+def pmean_tree(tree: Any, axis_name: str) -> Any:
+    return jax.tree_util.tree_map(lambda x: jax.lax.pmean(x, axis_name), tree)
+
+
+def all_to_all_tokens(x: jnp.ndarray, axis_name: str, split_axis: int = 0,
+                      concat_axis: int = 0) -> jnp.ndarray:
+    """Expert-parallel token exchange (inside shard_map)."""
+    n = jax.lax.psum(1, axis_name)
+    return jax.lax.all_to_all(x, axis_name, split_axis, concat_axis, tiled=True)

@@ -1,0 +1,75 @@
+"""Activation sharding constraints (MaxText-style logical annotations).
+
+Inside large jitted programs, SPMD propagation through reshapes/transposes/
+scans is conservative — attention heads or token axes silently replicate,
+inflating activation memory by the mesh size.  ``constrain`` pins the
+intended PartitionSpec when a mesh context is active (``with use_mesh(m):``
+around trace/lower) and is a no-op in plain CPU tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["use_mesh", "current_mesh", "constrain", "mesh_axes"]
+
+_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    """Activate ``mesh`` for activation constraints during tracing/lowering."""
+    prev = getattr(_STATE, "mesh", None)
+    _STATE.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _STATE.mesh = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+def mesh_axes() -> Tuple[str, ...]:
+    m = current_mesh()
+    return tuple(m.axis_names) if m is not None else ()
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint(x, P(*axes)) against the active mesh.
+
+    Axis entries may be None, a name, or a tuple of names; names missing
+    from the mesh or not dividing the dim are dropped (no-op per-dim)."""
+    m = current_mesh()
+    if m is None or len(axes) != x.ndim:
+        return x
+    present = set(m.axis_names)
+    sizes = dict(zip(m.axis_names, m.devices.shape))
+
+    def fit(a, dim):
+        if a is None:
+            return None
+        names = tuple(
+            n for n in (a if isinstance(a, tuple) else (a,)) if n in present
+        )
+        if not names:
+            return None
+        f = 1
+        for n in names:
+            f *= sizes[n]
+        if dim % f != 0:
+            return None
+        return names if len(names) > 1 else names[0]
+
+    spec = tuple(fit(a, d) for a, d in zip(axes, x.shape))
+    if all(s is None for s in spec):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(m, P(*spec)))
+    except Exception:  # pragma: no cover
+        return x

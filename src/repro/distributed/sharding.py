@@ -1,0 +1,187 @@
+"""Sharding rules: logical param/batch axes -> mesh axes, per arch family.
+
+Follows the MaxText "logical axis rules" pattern: a path-based rule table
+maps each parameter leaf to a PartitionSpec.  Mesh axes:
+  * ``pod``   — data parallelism across pods (DCN; slow, compressed grads)
+  * ``data``  — data parallelism within a pod (ICI)
+  * ``model`` — tensor/expert/vocab/row parallelism (ICI)
+Sequence sharding (long-context KV) reuses ``data``.
+
+``param_spec_lm`` handles the stacked-scan layout (leading L axis unsharded).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "dp_axes",
+    "param_spec_lm",
+    "param_spec_gnn",
+    "param_spec_bst",
+    "batch_spec_lm",
+    "named",
+    "tree_shardings",
+]
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The data-parallel axes present in this mesh (('pod','data') or ('data',))."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _lm_rule(path: str, rank: int, ep_divisible: bool = True) -> P:
+    """PartitionSpec for one LM param leaf, *excluding* the stacked-L axis.
+
+    ``rank`` is the per-layer rank (disambiguates dense [dff,d] vs MoE
+    [E,dff,d] weights sharing path suffixes).  ``ep_divisible``: experts
+    shard over ``model`` when E % model == 0, else the expert hidden dim
+    shards (TP-within-expert, e.g. granite's 40 experts on 16 shards)."""
+    # attention
+    if path.endswith("attn.wq") or path.endswith("attn.wk") or path.endswith("attn.wv"):
+        return P(None, "model")
+    if path.endswith("attn.wo"):
+        return P("model", None)
+    if path.endswith("attn.w_uk") or path.endswith("attn.w_uv"):
+        return P(None, "model")  # MLA up-projections: heads sharded
+    if path.endswith("attn.w_dkv") or path.endswith("attn.w_krope"):
+        return P(None, None)  # small latent projections: replicated
+    # MoE expert weights are 3D per layer: [E, d, f] / [E, f, d]
+    if rank == 3 and (
+        path.endswith("ffn.w_gate") or path.endswith("ffn.w_up")
+    ):
+        return P("model", None, None) if ep_divisible else P(None, None, "model")
+    if rank == 3 and path.endswith("ffn.w_down"):
+        return P("model", None, None) if ep_divisible else P(None, "model", None)
+    if path.endswith("ffn.router"):
+        return P(None, None)
+    if "shared_gate" in path or "shared_up" in path:
+        return P(None, "model")
+    if "shared_down" in path:
+        return P("model", None)
+    # dense FFN (2D per layer)
+    if path.endswith("ffn.w_gate") or path.endswith("ffn.w_up"):
+        return P(None, "model")
+    if path.endswith("ffn.w_down"):
+        return P("model", None)
+    # embeddings: vocab-sharded
+    if path.endswith("embed.table") or path.endswith("unembed.table"):
+        return P("model", None)
+    return P()  # norms, gains, biases: replicated
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return ".".join(parts)
+
+
+def param_spec_lm(
+    params_tree: Any, ep_divisible: bool = True, fsdp: bool = False
+) -> Any:
+    """PartitionSpec pytree for LM params (stacked-scan layout aware).
+
+    ``fsdp=True`` additionally shards the non-``model`` dim of every 2D+
+    weight over ``data`` (ZeRO-3 style) — required for params+opt of 27B-
+    class models to fit 16GB/chip; XLA inserts the per-layer all-gathers."""
+
+    def rule(path, leaf):
+        s = _path_str(path)
+        stacked = s.startswith("layers.")
+        rank = leaf.ndim - 1 if stacked else leaf.ndim
+        base = _lm_rule(s, rank, ep_divisible)
+        if fsdp and rank >= 2:
+            axes = list(base) + [None] * (rank - len(base))
+            if "data" not in axes:
+                # shard the largest un-sharded dim over data (prefer dim 0)
+                for i in range(rank):
+                    if axes[i] is None and leaf.shape[i + (1 if stacked else 0)] % 16 == 0:
+                        axes[i] = "data"
+                        break
+            base = P(*axes)
+        if stacked and len(base) < leaf.ndim:  # prepend None for the L axis
+            return P(*((None,) * (leaf.ndim - len(base)) + tuple(base)))
+        if len(base) > leaf.ndim:
+            return P(*base[: leaf.ndim])
+        return base
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def param_spec_gnn(params_tree: Any) -> Any:
+    """GNN params are small (<= ~35M); replicate everywhere."""
+    return jax.tree_util.tree_map(lambda leaf: P(), params_tree)
+
+
+def param_spec_bst(params_tree: Any) -> Any:
+    """BST: embedding tables row-sharded over ``model``; the rest replicated."""
+
+    def rule(path, leaf):
+        s = _path_str(path)
+        if s.endswith("item_table") or s.endswith("cat_table"):
+            return P("model", None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def batch_spec_lm(mesh: Mesh, kind: str) -> Dict[str, P]:
+    """Input PartitionSpecs per shape kind."""
+    dp = dp_axes(mesh)
+    if kind == "train":
+        return {"tokens": P(dp, None), "labels": P(dp, None)}
+    if kind == "prefill":
+        return {"tokens": P(dp, None)}
+    if kind == "decode":
+        # caches handled separately (see configs.input_specs)
+        return {"token": P(dp), "position": P(dp)}
+    raise ValueError(kind)
+
+
+def tree_shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def constrain_lm_layer(lp, ep_divisible: bool = True, fsdp: bool = True):
+    """Re-pin per-layer weight shardings *inside* the scan body.
+
+    Without this, the SPMD partitioner hoists the FSDP all-gather of the
+    whole stacked [L, ...] parameter array out of the layer loop — the
+    entire model materializes unsharded (27B fp32 = 108 GB/device).  With
+    the in-body constraint the gather happens per layer slice."""
+    from .constraints import constrain, current_mesh
+
+    if current_mesh() is None:
+        return lp
+
+    def pin(path, leaf):
+        if leaf.ndim < 2:
+            return leaf
+        s = _path_str(path)
+        base = _lm_rule(s, leaf.ndim, ep_divisible)
+        axes = list(base) + [None] * (leaf.ndim - len(base))
+        if fsdp and "data" not in axes:
+            for i in range(leaf.ndim):
+                if axes[i] is None and leaf.shape[i] % 16 == 0:
+                    axes[i] = "data"
+                    break
+        return constrain(leaf, *axes[: leaf.ndim])
+
+    return jax.tree_util.tree_map_with_path(pin, lp)

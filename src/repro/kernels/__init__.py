@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel module contains a ``pl.pallas_call`` with explicit BlockSpec
+VMEM tiling; ``ref.py`` holds the pure-jnp oracles; ``ops.py`` the jit'd
+public wrappers with platform dispatch.
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,115 @@
+"""Directed-Heat-Diffusion step over ELL adjacency — Pallas TPU kernel.
+
+This is the paper's compute hot-spot (Eqs. 7-8 iterated to steady state for
+placement scoring, pre-caching and eviction).  TPU adaptation (DESIGN §2):
+a GPU implementation would scatter per edge; here the adjacency is packed as
+**symmetric ELL** (每 row = padded neighbor list) so every row's update is a
+dense VPU reduction, tiled ``block_n`` rows at a time in VMEM.
+
+Two passes (both O(n * kmax)):
+  1. ``_count_kernel`` — |N_u^out| = # strictly-lower-heat neighbors per row.
+  2. ``_flow_kernel``  — inflow - outflow per row given the global n_out.
+
+The full heat / n_out vectors stay resident in VMEM as (n, 1) blocks
+(n <= ~2M fp32 fits the 16MB*ish VMEM budget per core; larger graphs are
+block-diffused per cluster by the control plane, which is exactly how the
+paper confines DHD runs to clusters).  Overflow edges beyond kmax live in a
+COO tail handled by ``ops.dhd_step`` with segment ops.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dhd_ell_step"]
+
+
+def _count_kernel(h_ref, cols_ref, vals_ref, nout_ref):
+    i = pl.program_id(0)
+    block_n = cols_ref.shape[0]
+    heat = h_ref[:, 0]  # [n] full vector in VMEM
+    cols = cols_ref[...]  # [block_n, kmax]
+    vals = vals_ref[...]
+    h_u = jax.lax.dynamic_slice(heat, (i * block_n,), (block_n,))[:, None]
+    h_nb = jnp.take(heat, cols, axis=0)  # VMEM gather
+    out_mask = (vals > 0) & (h_u > h_nb)
+    nout_ref[:, 0] = out_mask.sum(axis=1).astype(jnp.float32)
+
+
+def _flow_kernel(h_ref, nout_ref, cols_ref, vals_ref, delta_ref, *, alpha: float):
+    i = pl.program_id(0)
+    block_n = cols_ref.shape[0]
+    heat = h_ref[:, 0]
+    n_out = nout_ref[:, 0]
+    cols = cols_ref[...]
+    vals = vals_ref[...]
+    h_u = jax.lax.dynamic_slice(heat, (i * block_n,), (block_n,))[:, None]
+    nout_u = jnp.maximum(
+        jax.lax.dynamic_slice(n_out, (i * block_n,), (block_n,)), 1.0
+    )[:, None]
+    h_nb = jnp.take(heat, cols, axis=0)
+    nout_nb = jnp.maximum(jnp.take(n_out, cols, axis=0), 1.0)
+    out_mask = (vals > 0) & (h_u > h_nb)
+    in_mask = (vals > 0) & (h_nb > h_u)
+    outflow = (alpha / nout_u * vals * jnp.where(out_mask, h_u - h_nb, 0.0)).sum(
+        axis=1
+    )
+    inflow = (alpha / nout_nb * vals * jnp.where(in_mask, h_nb - h_u, 0.0)).sum(
+        axis=1
+    )
+    delta_ref[:, 0] = inflow - outflow
+
+
+@functools.partial(
+    jax.jit, static_argnames=("alpha", "gamma", "beta", "block_n", "interpret")
+)
+def dhd_ell_step(
+    heat: jnp.ndarray,  # [n] float32
+    cols: jnp.ndarray,  # [n, kmax] int32 symmetric ELL (pad = self)
+    vals: jnp.ndarray,  # [n, kmax] float32 (0 where padded)
+    q: jnp.ndarray,  # [n] source heat
+    alpha: float = 0.5,
+    gamma: float = 0.1,
+    beta: float = 0.3,
+    block_n: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One DHD update; ELL part only (COO tail composed in ``ops.dhd_step``)."""
+    n, kmax = cols.shape
+    block_n = min(block_n, n)
+    assert n % block_n == 0, "pad n to a multiple of block_n"
+    grid = (n // block_n,)
+    h2d = heat[:, None].astype(jnp.float32)  # (n, 1) — VMEM-resident layout
+
+    n_out = pl.pallas_call(
+        _count_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),  # full heat
+            pl.BlockSpec((block_n, kmax), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, kmax), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=interpret,
+    )(h2d, cols, vals)
+
+    delta = pl.pallas_call(
+        functools.partial(_flow_kernel, alpha=alpha),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_n, kmax), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, kmax), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=interpret,
+    )(h2d, n_out, cols, vals)
+
+    return (1.0 - gamma) * (heat + delta[:, 0]) + beta * q

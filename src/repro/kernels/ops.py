@@ -1,0 +1,166 @@
+"""Public kernel API: jit'd wrappers dispatching Pallas kernel vs jnp oracle.
+
+Policy: on TPU backends the Pallas kernels run compiled; on CPU (this
+container) the default is the pure-jnp reference (fast, vectorized) while
+``interpret=True`` forces the kernel body through the Pallas interpreter for
+validation.  ``use_kernel`` can be pinned explicitly by callers/tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .dhd_spmv import dhd_ell_step
+from .embedding_bag import embedding_bag as _embedding_bag_kernel
+from .flash_attention import flash_attention as _flash_attention_kernel
+
+__all__ = ["attention", "dhd_step", "bag_lookup", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.lru_cache(maxsize=None)
+def _attention_with_vjp(causal: bool, window: Optional[int], block_q: int,
+                        block_kv: int, interpret: bool):
+    """Trainable flash attention: Pallas kernel forward, reference-math
+    backward (the standard pattern until a fused bwd kernel lands — the
+    bwd recomputes attention from the saved q/k/v, so no S x S residuals
+    are stored either way)."""
+
+    @jax.custom_vjp
+    def f(q, k, v):
+        return _flash_attention_kernel(
+            q, k, v, causal=causal, window=window,
+            block_q=block_q, block_kv=block_kv, interpret=interpret,
+        )
+
+    def fwd(q, k, v):
+        return f(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        _, pullback = jax.vjp(
+            lambda q_, k_, v_: ref.attention_ref(
+                q_, k_, v_, causal=causal, window=window
+            ),
+            q, k, v,
+        )
+        return pullback(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: Optional[int] = None,
+    use_kernel: Optional[bool] = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+) -> jnp.ndarray:
+    """FlashAttention when kernel-eligible, dense reference otherwise.
+
+    Kernel eligibility: TPU backend (or explicit request) and block-divisible
+    sequence lengths.  The kernel path is differentiable (custom VJP with a
+    recompute backward), so it serves training and serving alike."""
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    sq, skv = q.shape[2], k.shape[2]
+    divisible = sq % min(block_q, sq) == 0 and skv % min(block_kv, skv) == 0
+    if use_kernel and divisible:
+        fn = _attention_with_vjp(
+            causal, window, min(block_q, sq), min(block_kv, skv), not on_tpu()
+        )
+        return fn(q, k, v)
+    return ref.attention_ref(q, k, v, causal=causal, window=window)
+
+
+def dhd_step(
+    heat: jnp.ndarray,
+    cols: jnp.ndarray,
+    vals: jnp.ndarray,
+    q: jnp.ndarray,
+    tail_src: Optional[jnp.ndarray] = None,
+    tail_dst: Optional[jnp.ndarray] = None,
+    tail_val: Optional[jnp.ndarray] = None,
+    alpha: float = 0.5,
+    gamma: float = 0.1,
+    beta: float = 0.3,
+    use_kernel: Optional[bool] = None,
+    block_n: int = 256,
+) -> jnp.ndarray:
+    """DHD update over ELL (+ optional COO tail for overflow edges).
+
+    The tail contributes to both |N_u^out| and the flows; since the ELL
+    kernel computes counts internally, tail edges are folded in by running
+    the edge-list reference over the tail *jointly* with per-row ELL flows
+    only when a tail exists (rare: >q98 degree).  Placement confines DHD to
+    clusters, so the no-tail fast path dominates.
+    """
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    has_tail = tail_src is not None and tail_src.size > 0
+    if has_tail:
+        # Tail edges change |N_u^out| globally, so the blocked kernel cannot
+        # be patched additively — reconstruct the exact undirected edge list
+        # (host-side) and use the edge-list formulation.  An edge may appear
+        # in one endpoint's ELL row while overflowing the other's, so dedupe
+        # on the canonical (min,max) key, not on direction.
+        import numpy as np
+
+        n = heat.shape[0]
+        cols_np, vals_np = np.asarray(cols), np.asarray(vals)
+        iu, ik = np.nonzero(vals_np > 0)
+        e_src = np.concatenate([iu, np.asarray(tail_src)])
+        e_dst = np.concatenate([cols_np[iu, ik], np.asarray(tail_dst)])
+        e_w = np.concatenate([vals_np[iu, ik], np.asarray(tail_val)])
+        a = np.minimum(e_src, e_dst)
+        b = np.maximum(e_src, e_dst)
+        _, first = np.unique(a.astype(np.int64) * n + b, return_index=True)
+        from ..core.dhd import dhd_step_edges
+
+        return dhd_step_edges(
+            heat,
+            jnp.asarray(a[first], jnp.int32),
+            jnp.asarray(b[first], jnp.int32),
+            jnp.asarray(e_w[first], jnp.float32),
+            q, n, alpha=alpha, gamma=gamma, beta=beta,
+        )
+    if use_kernel and heat.shape[0] % min(block_n, heat.shape[0]) == 0:
+        return dhd_ell_step(
+            heat, cols, vals, q, alpha=alpha, gamma=gamma, beta=beta,
+            block_n=min(block_n, heat.shape[0]), interpret=not on_tpu(),
+        )
+    return ref.dhd_ell_ref(heat, cols, vals, q, alpha=alpha, gamma=gamma, beta=beta)
+
+
+def bag_lookup(
+    table: jnp.ndarray,
+    indices: jnp.ndarray,
+    weights: Optional[jnp.ndarray] = None,
+    mode: str = "sum",
+    use_kernel: Optional[bool] = None,
+    block_b: int = 128,
+    block_v: int = 1024,
+) -> jnp.ndarray:
+    """EmbeddingBag lookup (sum/mean)."""
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    b, _ = indices.shape
+    v, _ = table.shape
+    divisible = b % min(block_b, b) == 0 and v % min(block_v, v) == 0
+    if use_kernel and divisible:
+        return _embedding_bag_kernel(
+            table, indices, weights, mode=mode,
+            block_b=block_b, block_v=block_v, interpret=not on_tpu(),
+        )
+    return ref.embedding_bag_ref(table, indices, weights, mode=mode)

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret mode
+on CPU, shape/dtype sweeps in tests/test_kernels_*.py) and the fallback used
+by ``ops.py`` when running on platforms without Pallas support.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "dhd_ell_ref", "embedding_bag_ref"]
+
+
+def attention_ref(
+    q: jnp.ndarray,  # [B, Hq, Sq, D]
+    k: jnp.ndarray,  # [B, Hkv, Skv, D]
+    v: jnp.ndarray,  # [B, Hkv, Skv, D]
+    causal: bool = True,
+    window: Optional[int] = None,  # sliding-window size (local attention)
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Dense softmax attention with GQA head grouping + causal/local masks.
+
+    With Sq < Skv (decode/chunked prefill), query position i is aligned to
+    absolute position ``i + Skv - Sq`` (the suffix convention)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kr) * scale
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq)
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vr).astype(q.dtype)
+
+
+def dhd_ell_ref(
+    heat: jnp.ndarray,  # [n]
+    cols: jnp.ndarray,  # [n, kmax] symmetric ELL neighbor ids (pad = self)
+    vals: jnp.ndarray,  # [n, kmax] edge weights (0 where padded)
+    q: jnp.ndarray,  # [n] source heat this step
+    alpha: float = 0.5,
+    gamma: float = 0.1,
+    beta: float = 0.3,
+) -> jnp.ndarray:
+    """DHD step (Eqs. 7-8) over a symmetric ELL adjacency.
+
+    Returns the updated heat.  Matches ``core.dhd.dhd_step_edges`` on the
+    corresponding undirected edge list (each edge present in both rows).
+    """
+    h_nb = heat[cols]  # [n, kmax]
+    h_u = heat[:, None]
+    active = vals > 0
+    out_mask = active & (h_u > h_nb)
+    in_mask = active & (h_nb > h_u)
+    # |N_u^out| — strictly-lower-heat neighbors of u
+    n_out = jnp.maximum(out_mask.sum(axis=1), 1).astype(heat.dtype)
+    outflow = (
+        alpha / n_out[:, None] * vals * jnp.where(out_mask, h_u - h_nb, 0.0)
+    ).sum(axis=1)
+    # inflow from each hotter neighbor j uses |N_j^out|
+    inflow = (
+        alpha / n_out[cols] * vals * jnp.where(in_mask, h_nb - h_u, 0.0)
+    ).sum(axis=1)
+    return (1.0 - gamma) * (heat + inflow - outflow) + beta * q
+
+
+def embedding_bag_ref(
+    table: jnp.ndarray,  # [V, D]
+    indices: jnp.ndarray,  # [B, L] int32
+    weights: Optional[jnp.ndarray] = None,  # [B, L]
+    mode: str = "sum",
+) -> jnp.ndarray:
+    """EmbeddingBag: per-bag weighted gather-reduce (sum or mean).
+
+    JAX has no native ``nn.EmbeddingBag``; this take+reduce *is* the system's
+    reference lookup (kernel_taxonomy §B.6)."""
+    rows = table[indices]  # [B, L, D]
+    if weights is None:
+        weights = jnp.ones(indices.shape, dtype=table.dtype)
+    out = (rows * weights[..., None]).sum(axis=1)
+    if mode == "mean":
+        denom = jnp.maximum(weights.sum(axis=1, keepdims=True), 1e-9)
+        out = out / denom
+    return out

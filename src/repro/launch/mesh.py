@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Never touches jax device state at import time — everything is a function.
+Single-pod: (data=16, model=16) = 256 chips.  Multi-pod: (pod=2, data=16,
+model=16) = 512 chips; the ``pod`` axis maps to DCN (slow links), which is
+exactly the latency layer the GeoLayer machinery treats as ``Layer_2``
+(see distributed/geo_sharding.mesh_env).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_cpu_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "(launch/dryrun.py sets this before importing jax)"
+        )
+    arr = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(arr, axes)
+
+
+def make_cpu_mesh(shape: Sequence[int] = (1, 1), axes: Sequence[str] = ("data", "model")) -> Mesh:
+    """Degenerate mesh for CPU smoke tests (1 device)."""
+    n = int(np.prod(shape))
+    arr = np.asarray(jax.devices()[:n]).reshape(tuple(shape))
+    return Mesh(arr, tuple(axes))

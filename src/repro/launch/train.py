@@ -1,0 +1,96 @@
+"""End-to-end training launcher: ``python -m repro.launch.train --arch <id>``.
+
+On this CPU container it trains the arch's *smoke* config with the real
+Trainer (checkpointing, compression, failure injection all live); on a TPU
+cluster the same flags select the full config + production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from ..configs import get_arch, list_archs
+from ..data.pipeline import TokenPipeline
+from ..distributed.fault import FailureSimulator
+from ..train.optimizer import OptConfig
+from ..train.trainer import Trainer, TrainerConfig
+
+
+def make_data(arch, seed: int = 0):
+    if arch.family == "lm":
+        cfg = arch.smoke_cfg
+        return iter(TokenPipeline(cfg.vocab_size, batch=8, seq_len=32, seed=seed))
+    if arch.family == "recsys":
+        from ..data.pipeline import RecsysPipeline
+
+        sp = arch.smoke_spec
+        pipe = RecsysPipeline(sp.n_items, sp.n_cats, batch=8, seq_len=sp.seq_len, seed=seed)
+
+        def gen():
+            step = 0
+            while True:
+                b = pipe.batch_at(step)
+                yield {
+                    "hist_items": b["hist_items"], "hist_cats": b["hist_cats"],
+                    "target_item": b["target_item"], "target_cat": b["target_cat"],
+                    "label": b["label"],
+                }
+                step += 1
+
+        return gen()
+    # gnn: fixed random graph batch each step (full-batch training)
+    key = jax.random.PRNGKey(seed)
+    batch = arch.smoke_batch(key)
+
+    def gen():
+        while True:
+            yield {k: np.asarray(v) for k, v in batch.items()}
+
+    return gen()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs() + ["all"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--compression", default=None, choices=[None, "int8", "topk"])
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a node failure at this step (recovery demo)")
+    args = ap.parse_args()
+
+    names = list_archs() if args.arch == "all" else [args.arch]
+    for name in names:
+        arch = get_arch(name)
+        params = arch.smoke_params(jax.random.PRNGKey(0))
+        sim = FailureSimulator([(args.fail_at, 1)]) if args.fail_at else None
+        tcfg = TrainerConfig(
+            total_steps=args.steps,
+            ckpt_every=max(args.steps // 4, 1),
+            ckpt_dir=f"{args.ckpt_dir}/{name}",
+            grad_compression=args.compression,
+            opt=OptConfig(lr=1e-3, warmup_steps=5, total_steps=args.steps),
+        )
+        tr = Trainer(
+            lambda p, b: _wrap(arch.smoke_loss)(p, b), params, tcfg, failure_sim=sim
+        )
+        metrics = tr.run(make_data(arch))
+        losses = metrics["loss"]
+        print(
+            f"[{name}] {len(losses)} steps  loss {losses[0]:.4f} -> {losses[-1]:.4f}"
+            + (f"  recoveries={len(metrics.get('recoveries', []))}" if sim else "")
+        )
+
+
+def _wrap(loss_fn):
+    def f(params, batch):
+        l = loss_fn(params, batch)
+        return l, {}
+
+    return f
+
+
+if __name__ == "__main__":
+    main()

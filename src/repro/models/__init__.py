@@ -1,0 +1,2 @@
+from . import attention, layers, moe, transformer  # noqa: F401
+from . import gnn, recsys  # noqa: F401

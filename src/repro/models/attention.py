@@ -1,0 +1,355 @@
+"""Attention variants for the LM zoo: GQA (+qk-norm), sliding-window/global
+mix (gemma3), and MLA (DeepSeek-V2 latent KV compression).
+
+Execution paths:
+  * ``ops.attention``     — Pallas flash kernel on TPU, dense ref on CPU.
+  * ``chunked_attention`` — pure-XLA online-softmax over KV chunks (``lax.scan``):
+    the distribution-grade path used for long sequences in the dry-run, with
+    flash-like memory (never materializes S x S logits).
+
+KV caches are plain dicts of arrays; decode steps update them functionally.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.constraints import constrain
+from ..kernels import ops
+from .layers import Params, dense_init, rmsnorm, rmsnorm_init, rope
+
+__all__ = [
+    "chunked_attention",
+    "gqa_init",
+    "gqa_forward",
+    "gqa_decode",
+    "mla_init",
+    "mla_forward",
+    "mla_decode",
+]
+
+
+# ------------------------------------------------------- chunked (XLA flash)
+def chunked_attention(
+    q: jnp.ndarray,  # [B, Hq, Sq, D]
+    k: jnp.ndarray,  # [B, Hkv, Skv, D]
+    v: jnp.ndarray,  # [B, Hkv, Skv, D]
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk_kv: int = 1024,
+    chunk_q: int = 2048,
+    kv_valid: Optional[jnp.ndarray] = None,  # [B] #valid kv positions
+) -> jnp.ndarray:
+    """Online-softmax attention scanning KV (and Q) chunks — O(Sq*Ckv) peak.
+
+    Equivalent to ``ref.attention_ref``; used where the Pallas kernel is not
+    available and S^2 logits would blow HBM (32k prefill, 500k decode).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    dv = v.shape[-1]  # may differ from qk dim (MLA)
+    group = hq // hkv
+    scale = d ** -0.5
+    chunk_kv = min(chunk_kv, skv)
+    chunk_q = min(chunk_q, sq)
+    pad_kv = (-skv) % chunk_kv
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    n_kv = k.shape[2] // chunk_kv
+    kc = k.reshape(b, hkv, n_kv, chunk_kv, d)
+    vc = v.reshape(b, hkv, n_kv, chunk_kv, dv)
+
+    def q_block(qb: jnp.ndarray, q0: jnp.ndarray) -> jnp.ndarray:
+        # qb: [B, Hq, cq, D]; q0: scalar absolute offset of this q block
+        cq = qb.shape[2]
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kb, vb, ikv = inp  # [B, Hkv, ckv, D]
+            kb = jnp.repeat(kb, group, axis=1)
+            vb = jnp.repeat(vb, group, axis=1)
+            s = jnp.einsum(
+                "bhqd,bhkd->bhqk", qb.astype(jnp.float32), kb.astype(jnp.float32)
+            ) * scale
+            q_pos = q0 + jnp.arange(cq)[:, None] + (skv - sq)
+            k_pos = ikv * chunk_kv + jnp.arange(chunk_kv)[None, :]
+            mask = k_pos < skv  # padding
+            if causal:
+                mask = mask & (k_pos <= q_pos)
+            if window is not None:
+                mask = mask & (k_pos > q_pos - window)
+            if kv_valid is not None:
+                mask = mask[None] & (k_pos[None] < kv_valid[:, None, None])
+                mask = mask[:, None]
+            else:
+                mask = mask[None, None]
+            s = jnp.where(mask, s, -1e30)
+            m_cur = s.max(axis=-1, keepdims=True)
+            m_new = jnp.maximum(m, m_cur)
+            p = jnp.exp(s - m_new)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1, keepdims=True)
+            acc_new = acc * corr + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vb.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hq, cq, 1), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hq, cq, 1), jnp.float32)
+        a0 = jnp.zeros((b, hq, cq, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step,
+            (m0, l0, a0),
+            (
+                jnp.moveaxis(kc, 2, 0),
+                jnp.moveaxis(vc, 2, 0),
+                jnp.arange(n_kv),
+            ),
+        )
+        return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+    if sq <= chunk_q:
+        return q_block(q, jnp.asarray(0))
+    n_q = sq // chunk_q
+    assert sq % chunk_q == 0
+    qs = jnp.moveaxis(q.reshape(b, hq, n_q, chunk_q, d), 2, 0)
+    outs = jax.lax.map(
+        lambda args: q_block(args[0], args[1] * chunk_q), (qs, jnp.arange(n_q))
+    )
+    return jnp.moveaxis(outs, 0, 2).reshape(b, hq, sq, dv)
+
+
+def _attend(
+    q, k, v, causal: bool, window: Optional[int], kv_valid=None, prefer_kernel=True
+) -> jnp.ndarray:
+    """Dispatch: Pallas kernel (TPU) -> chunked XLA (long) -> dense ref."""
+    skv = k.shape[2]
+    if kv_valid is None and ops.on_tpu() and prefer_kernel:
+        return ops.attention(q, k, v, causal=causal, window=window)
+    if skv > 2048 or kv_valid is not None:
+        return chunked_attention(q, k, v, causal=causal, window=window, kv_valid=kv_valid)
+    from ..kernels.ref import attention_ref
+
+    return attention_ref(q, k, v, causal=causal, window=window)
+
+
+# ------------------------------------------------------------------- GQA
+def gqa_init(
+    key,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    qk_norm: bool = False,
+) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(k1, d_model, n_heads * head_dim)["w"],
+        "wk": dense_init(k2, d_model, n_kv_heads * head_dim)["w"],
+        "wv": dense_init(k3, d_model, n_kv_heads * head_dim)["w"],
+        "wo": dense_init(k4, n_heads * head_dim, d_model)["w"],
+    }
+    if qk_norm:
+        p["q_norm"] = rmsnorm_init(head_dim)["g"]
+        p["k_norm"] = rmsnorm_init(head_dim)["g"]
+    return p
+
+
+def _split_heads(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1).transpose(0, 2, 1, 3)  # [B, H, S, D]
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def gqa_forward(
+    p: Params,
+    x: jnp.ndarray,  # [B, S, d_model]
+    positions: jnp.ndarray,  # [S] or [B, S]
+    n_heads: int,
+    n_kv_heads: int,
+    causal: bool = True,
+    window: Optional[int] = None,
+    rope_base: float = 10000.0,
+    dtype=jnp.bfloat16,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence attention (train / prefill).  Returns (out, kv_cache)."""
+    xd = x.astype(dtype)
+    dp = ("pod", "data")
+    q = constrain(_split_heads(xd @ p["wq"].astype(dtype), n_heads), dp, "model", None, None)
+    k = constrain(_split_heads(xd @ p["wk"].astype(dtype), n_kv_heads), dp, "model", None, None)
+    v = constrain(_split_heads(xd @ p["wv"].astype(dtype), n_kv_heads), dp, "model", None, None)
+    if "q_norm" in p:
+        q = rmsnorm({"g": p["q_norm"]}, q)
+        k = rmsnorm({"g": p["k_norm"]}, k)
+    q = rope(q, positions, rope_base)
+    k = rope(k, positions, rope_base)
+    o = constrain(_attend(q, k, v, causal, window), dp, "model", None, None)
+    out = _merge_heads(o).astype(dtype) @ p["wo"].astype(dtype)
+    return out, {"k": k, "v": v}
+
+
+def gqa_decode(
+    p: Params,
+    x: jnp.ndarray,  # [B, 1, d_model]
+    cache: Dict[str, jnp.ndarray],  # k/v: [B, Hkv, Smax, D]
+    position: jnp.ndarray,  # [B] current absolute position
+    n_heads: int,
+    n_kv_heads: int,
+    window: Optional[int] = None,
+    rope_base: float = 10000.0,
+    dtype=jnp.bfloat16,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token decode with in-place functional KV-cache update."""
+    xd = x.astype(dtype)
+    dp = ("pod", "data")
+    q = constrain(_split_heads(xd @ p["wq"].astype(dtype), n_heads), dp, "model", None, None)
+    k_new = constrain(_split_heads(xd @ p["wk"].astype(dtype), n_kv_heads), dp, "model", None, None)
+    v_new = constrain(_split_heads(xd @ p["wv"].astype(dtype), n_kv_heads), dp, "model", None, None)
+    if "q_norm" in p:
+        q = rmsnorm({"g": p["q_norm"]}, q)
+        k_new = rmsnorm({"g": p["k_norm"]}, k_new)
+    q = rope(q, position[:, None], rope_base)
+    k_new = rope(k_new, position[:, None], rope_base)
+    b = x.shape[0]
+    kc = jax.vmap(
+        lambda c, n, pos: jax.lax.dynamic_update_slice(c, n, (0, pos, 0))
+    )(cache["k"], k_new, position)
+    vc = jax.vmap(
+        lambda c, n, pos: jax.lax.dynamic_update_slice(c, n, (0, pos, 0))
+    )(cache["v"], v_new, position)
+    kv_valid = position + 1
+    o = _attend(q, kc, vc, causal=False, window=window, kv_valid=kv_valid)
+    out = _merge_heads(o).astype(dtype) @ p["wo"].astype(dtype)
+    return out, {"k": kc, "v": vc}
+
+
+# ------------------------------------------------------------------- MLA
+def mla_init(
+    key,
+    d_model: int,
+    n_heads: int,
+    kv_lora_rank: int,
+    qk_nope_dim: int = 128,
+    qk_rope_dim: int = 64,
+    v_head_dim: int = 128,
+) -> Params:
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d_model)
+    sl = 1.0 / math.sqrt(kv_lora_rank)
+    return {
+        "wq": jax.random.normal(
+            ks[0], (d_model, n_heads * (qk_nope_dim + qk_rope_dim)), jnp.float32
+        ) * s,
+        "w_dkv": jax.random.normal(ks[1], (d_model, kv_lora_rank), jnp.float32) * s,
+        "w_krope": jax.random.normal(ks[2], (d_model, qk_rope_dim), jnp.float32) * s,
+        "w_uk": jax.random.normal(
+            ks[3], (kv_lora_rank, n_heads * qk_nope_dim), jnp.float32
+        ) * sl,
+        "w_uv": jax.random.normal(
+            ks[4], (kv_lora_rank, n_heads * v_head_dim), jnp.float32
+        ) * sl,
+        "wo": jax.random.normal(
+            ks[5], (n_heads * v_head_dim, d_model), jnp.float32
+        ) / math.sqrt(n_heads * v_head_dim),
+        "kv_norm": rmsnorm_init(kv_lora_rank)["g"],
+    }
+
+
+def mla_forward(
+    p: Params,
+    x: jnp.ndarray,  # [B, S, d]
+    positions: jnp.ndarray,
+    n_heads: int,
+    qk_nope_dim: int = 128,
+    qk_rope_dim: int = 64,
+    v_head_dim: int = 128,
+    causal: bool = True,
+    dtype=jnp.bfloat16,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """MLA (DeepSeek-V2): latent-compressed KV + decoupled RoPE head.
+
+    The cache stores only (c_kv [B,S,r], k_rope [B,S,dr]) — the paper's
+    memory saving; here we up-project per step (no absorbed-weight trick)."""
+    b, s, _ = x.shape
+    xd = x.astype(dtype)
+    q = xd @ p["wq"].astype(dtype)
+    q = q.reshape(b, s, n_heads, qk_nope_dim + qk_rope_dim).transpose(0, 2, 1, 3)
+    q = constrain(q, ("pod", "data"), "model", None, None)
+    q_nope, q_rope = q[..., :qk_nope_dim], q[..., qk_nope_dim:]
+    q_rope = rope(q_rope, positions)
+    c_kv = rmsnorm({"g": p["kv_norm"]}, xd @ p["w_dkv"].astype(dtype))  # [B,S,r]
+    k_rope = rope(
+        (xd @ p["w_krope"].astype(dtype))[:, None], positions
+    )  # [B,1,S,dr] shared head
+    k_nope = constrain((c_kv @ p["w_uk"].astype(dtype)).reshape(
+        b, s, n_heads, qk_nope_dim
+    ).transpose(0, 2, 1, 3), ("pod", "data"), "model", None, None)
+    v = constrain((c_kv @ p["w_uv"].astype(dtype)).reshape(
+        b, s, n_heads, v_head_dim
+    ).transpose(0, 2, 1, 3), ("pod", "data"), "model", None, None)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, n_heads, s, qk_rope_dim))], axis=-1
+    )
+    o = constrain(_attend(q_full, k_full, v, causal, None), ("pod", "data"), "model", None, None)
+    out = _merge_heads(o).astype(dtype) @ p["wo"].astype(dtype)
+    return out, {"c_kv": c_kv, "k_rope": k_rope[:, 0]}
+
+
+def mla_decode(
+    p: Params,
+    x: jnp.ndarray,  # [B, 1, d]
+    cache: Dict[str, jnp.ndarray],  # c_kv [B, Smax, r], k_rope [B, Smax, dr]
+    position: jnp.ndarray,  # [B]
+    n_heads: int,
+    qk_nope_dim: int = 128,
+    qk_rope_dim: int = 64,
+    v_head_dim: int = 128,
+    dtype=jnp.bfloat16,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    b = x.shape[0]
+    xd = x.astype(dtype)
+    q = xd @ p["wq"].astype(dtype)
+    q = q.reshape(b, 1, n_heads, qk_nope_dim + qk_rope_dim).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :qk_nope_dim], q[..., qk_nope_dim:]
+    q_rope = rope(q_rope, position[:, None])
+    c_new = rmsnorm({"g": p["kv_norm"]}, xd @ p["w_dkv"].astype(dtype))  # [B,1,r]
+    kr_new = rope((xd @ p["w_krope"].astype(dtype))[:, None], position[:, None])[
+        :, 0
+    ]  # [B,1,dr]
+    c_kv = jax.vmap(lambda c, n, pos: jax.lax.dynamic_update_slice(c, n, (pos, 0)))(
+        cache["c_kv"], c_new, position
+    )
+    k_rope = jax.vmap(lambda c, n, pos: jax.lax.dynamic_update_slice(c, n, (pos, 0)))(
+        cache["k_rope"], kr_new, position
+    )
+    s_max = c_kv.shape[1]
+    k_nope = constrain((c_kv @ p["w_uk"].astype(dtype)).reshape(
+        b, s_max, n_heads, qk_nope_dim
+    ).transpose(0, 2, 1, 3), ("pod", "data"), "model", None, None)
+    v = constrain((c_kv @ p["w_uv"].astype(dtype)).reshape(
+        b, s_max, n_heads, v_head_dim
+    ).transpose(0, 2, 1, 3), ("pod", "data"), "model", None, None)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [
+            k_nope,
+            jnp.broadcast_to(
+                k_rope[:, None], (b, n_heads, s_max, qk_rope_dim)
+            ),
+        ],
+        axis=-1,
+    )
+    kv_valid = position + 1
+    o = _attend(q_full, k_full, v, causal=False, window=None, kv_valid=kv_valid)
+    out = _merge_heads(o).astype(dtype) @ p["wo"].astype(dtype)
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,1 @@
+from . import common, egnn, equiformer_v2, meshgraphnet, schnet, wigner  # noqa: F401

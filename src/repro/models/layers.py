@@ -1,0 +1,140 @@
+"""Shared neural-net building blocks (pure-functional, pytree params).
+
+No flax/haiku in this environment — params are plain dicts of jnp arrays,
+initialized by ``init_*`` helpers and consumed by matching ``apply``-style
+functions.  Compute dtype is bf16 by default (TPU target); params stay fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init",
+    "dense",
+    "rmsnorm_init",
+    "rmsnorm",
+    "layernorm_init",
+    "layernorm",
+    "mlp_init",
+    "mlp",
+    "swiglu_init",
+    "swiglu",
+    "embedding_init",
+    "rope",
+    "cross_entropy",
+]
+
+Params = Dict[str, jnp.ndarray]
+
+
+def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None) -> Params:
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    return {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+
+
+def dense(p: Params, x: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return x.astype(dtype) @ p["w"].astype(dtype)
+
+
+def rmsnorm_init(d: int) -> Params:
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * p["g"]).astype(dt)
+
+
+def layernorm_init(d: int) -> Params:
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]).astype(dt)
+
+
+def mlp_init(key, dims: Sequence[int]) -> Params:
+    keys = jax.random.split(key, len(dims) - 1)
+    p: Params = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        p[f"w{i}"] = jax.random.normal(keys[i], (a, b), jnp.float32) / math.sqrt(a)
+        p[f"b{i}"] = jnp.zeros((b,), jnp.float32)
+    return p
+
+
+def mlp(
+    p: Params, x: jnp.ndarray, act=jax.nn.silu, final_act: bool = False,
+    dtype=jnp.bfloat16,
+) -> jnp.ndarray:
+    n = len([k for k in p if k.startswith("w")])
+    h = x.astype(dtype)
+    for i in range(n):
+        h = h @ p[f"w{i}"].astype(dtype) + p[f"b{i}"].astype(dtype)
+        if i < n - 1 or final_act:
+            h = act(h)
+    return h
+
+
+def swiglu_init(key, d: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "w_gate": jax.random.normal(k1, (d, d_ff), jnp.float32) * s,
+        "w_up": jax.random.normal(k2, (d, d_ff), jnp.float32) * s,
+        "w_down": jax.random.normal(k3, (d_ff, d), jnp.float32) / math.sqrt(d_ff),
+    }
+
+
+def swiglu(p: Params, x: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    xd = x.astype(dtype)
+    g = jax.nn.silu(xd @ p["w_gate"].astype(dtype))
+    u = xd @ p["w_up"].astype(dtype)
+    return (g * u) @ p["w_down"].astype(dtype)
+
+
+def embedding_init(key, vocab: int, d: int, scale: float = 0.02) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * scale}
+
+
+def rope(
+    x: jnp.ndarray,  # [..., S, D] (D even)
+    positions: jnp.ndarray,  # [..., S] or [S]
+    base: float = 10000.0,
+) -> jnp.ndarray:
+    """Rotary position embedding over the last dim (half-split convention)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(base) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    while ang.ndim < x.ndim:  # insert head axis: [..., 1, S, half]
+        ang = jnp.expand_dims(ang, -3)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(
+    logits: jnp.ndarray,  # [..., V]
+    labels: jnp.ndarray,  # [...]
+    mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1
+    )[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

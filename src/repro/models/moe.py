@@ -1,0 +1,178 @@
+"""Mixture-of-Experts FFN with capacity-bounded sort dispatch.
+
+Design (TPU/EP-friendly, DESIGN §7):
+  * router: softmax top-k with optional shared experts (DeepSeekMoE style);
+  * dispatch: tokens sorted by expert id, positions within expert via a
+    cumulative count, **capacity-clamped scatter** into a dense
+    ``[E, C, d]`` buffer — all static shapes, no one-hot ``[T, E, C]`` blowup;
+  * expert compute: two batched einsums over the expert axis (SwiGLU), so the
+    ``E`` axis shards cleanly over the ``model`` mesh axis (expert
+    parallelism) and XLA inserts the token all-to-all at the scatter/gather;
+  * combine: weighted gather-back; dropped tokens (over capacity) fall
+    through with zero contribution (standard GShard semantics).
+
+GeoLayer integration: per-expert routing counts are the *heat* signal; the
+placement layer (distributed/geo_sharding.py) can mark hot experts for
+replication, which here simply widens the expert buffer's replica group.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.constraints import constrain
+from .layers import Params
+
+__all__ = ["moe_init", "moe_forward"]
+
+
+def _pick_groups(t: int, target: int = 0) -> int:
+    """Dispatch group count: aligned with the mesh's data-parallel extent
+    (pod x data) so every group is shard-local — a 16-group dispatch on a
+    32-way dp mesh can't be sharded on the group axis and silently crosses
+    pods (EXPERIMENTS §Perf it. 9).  Falls back to 16 without a mesh."""
+    if target <= 0:
+        try:
+            from ..distributed.constraints import current_mesh
+
+            m = current_mesh()
+            target = 1
+            if m is not None:
+                sizes = dict(zip(m.axis_names, m.devices.shape))
+                for ax in ("pod", "data"):
+                    target *= sizes.get(ax, 1)
+            if target <= 1:
+                target = 16
+        except Exception:  # pragma: no cover
+            target = 16
+    g = target
+    while g > 1 and t % g != 0:
+        g //= 2
+    return g
+
+
+def moe_init(
+    key,
+    d_model: int,
+    d_ff_expert: int,
+    n_experts: int,
+    n_shared: int = 0,
+    d_ff_shared: Optional[int] = None,
+) -> Params:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d_model)
+    p: Params = {
+        "router": jax.random.normal(k1, (d_model, n_experts), jnp.float32) * s,
+        "w_gate": jax.random.normal(
+            k2, (n_experts, d_model, d_ff_expert), jnp.float32
+        ) * s,
+        "w_up": jax.random.normal(
+            k3, (n_experts, d_model, d_ff_expert), jnp.float32
+        ) * s,
+        "w_down": jax.random.normal(
+            k4, (n_experts, d_ff_expert, d_model), jnp.float32
+        ) / math.sqrt(d_ff_expert),
+    }
+    if n_shared > 0:
+        dfs = d_ff_shared or d_ff_expert * n_shared
+        ks1, ks2, ks3 = jax.random.split(k5, 3)
+        p["shared_gate"] = jax.random.normal(ks1, (d_model, dfs), jnp.float32) * s
+        p["shared_up"] = jax.random.normal(ks2, (d_model, dfs), jnp.float32) * s
+        p["shared_down"] = jax.random.normal(ks3, (dfs, d_model), jnp.float32) / math.sqrt(dfs)
+    return p
+
+
+def moe_forward(
+    p: Params,
+    x: jnp.ndarray,  # [B, S, d]
+    top_k: int,
+    capacity_factor: float = 1.25,
+    dtype=jnp.bfloat16,
+    n_active: Optional[int] = None,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Returns (output, aux) where aux carries router stats: ``expert_load``
+    (the GeoLayer heat signal) and ``aux_loss`` (load-balance loss).
+
+    ``n_active < E`` marks trailing experts as padding (EP-divisibility
+    padding, e.g. granite's 40 experts padded to 48 on a 16-way axis): the
+    router never selects them; their buffer rows stay zero."""
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    t = b * s
+    xt = x.reshape(t, d).astype(dtype)
+
+    logits = (xt.astype(jnp.float32)) @ p["router"]
+    if n_active is not None and n_active < e:
+        pad_mask = jnp.arange(e) >= n_active
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)  # [T, E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # [T, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- group-local dispatch (GShard grouping) ---------------------------
+    # A *global* argsort over the T*k assignments forces the partitioner to
+    # all-gather the sorted token gather in every layer (measured: the
+    # dominant collective term for MoE prefill/train, EXPERIMENTS §Perf it.6).
+    # Tokens are instead split into dp-aligned groups; each group sorts and
+    # capacity-clamps locally (vmap), so the only cross-device traffic left
+    # is the unavoidable token->expert all-to-all at the buffer boundary.
+    n_groups = _pick_groups(t)
+    tg = t // n_groups
+    capacity = max(int(capacity_factor * tg * top_k / e), 4)
+    gi = gate_idx.reshape(n_groups, tg, top_k)
+    gv = gate_vals.reshape(n_groups, tg, top_k)
+    xg = constrain(xt.reshape(n_groups, tg, d), ("pod", "data"), None, None)
+
+    def dispatch(gi_g, gv_g, x_g):
+        flat_e = gi_g.reshape(-1)  # [tg*k]
+        flat_t = jnp.repeat(jnp.arange(tg), top_k)
+        flat_w = gv_g.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+        cum = jnp.cumsum(jnp.ones_like(se)) - 1
+        first = jnp.full((e,), tg * top_k, cum.dtype).at[se].min(cum)
+        pos = cum - first[se]
+        keep = pos < capacity
+        pos_c = jnp.where(keep, pos, capacity - 1)
+        buf_g = jnp.zeros((e, capacity, d), dtype)
+        buf_g = buf_g.at[se, pos_c].add(jnp.where(keep[:, None], x_g[st], 0.0))
+        return buf_g, (se, st, sw, keep, pos_c)
+
+    buf_g, (se, st, sw, keep, pos_c) = jax.vmap(dispatch)(gi, gv, xg)
+    # [G, E, C, d] -> [E, G*C, d]: the all-to-all point (EP over `model`)
+    buf = constrain(
+        jnp.moveaxis(buf_g, 0, 1).reshape(e, n_groups * capacity, d),
+        "model", ("pod", "data"), None,
+    )
+
+    # expert SwiGLU over the E axis (EP-sharded einsums)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dtype)))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dtype))
+    y = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"].astype(dtype))  # [E,GC,d]
+    y = constrain(y, "model", ("pod", "data"), None)
+    y_g = jnp.moveaxis(y.reshape(e, n_groups, capacity, d), 1, 0)  # [G,E,C,d]
+
+    def combine(y_gg, se_g, st_g, sw_g, keep_g, pos_g):
+        gathered = y_gg[se_g, pos_g]  # [tg*k, d]
+        contrib = jnp.where(
+            keep_g[:, None], gathered * sw_g[:, None].astype(dtype), 0.0
+        )
+        return jnp.zeros((tg, d), dtype).at[st_g].add(contrib)
+
+    out = jax.vmap(combine)(y_g, se, st, sw, keep, pos_c)
+    out = constrain(out, ("pod", "data"), None, None).reshape(t, d)
+    flat_e = gate_idx.reshape(-1)  # for load stats below
+
+    if "shared_gate" in p:
+        sg = jax.nn.silu(xt @ p["shared_gate"].astype(dtype))
+        su = xt @ p["shared_up"].astype(dtype)
+        out = out + (sg * su) @ p["shared_down"].astype(dtype)
+
+    # load-balance aux loss (Switch): e * sum(f_i * P_i)
+    load = jnp.zeros((e,), jnp.float32).at[flat_e].add(1.0) / (t * top_k)
+    imp = probs.mean(axis=0)
+    aux_loss = e * jnp.sum(load * imp)
+    return out.reshape(b, s, d), {"expert_load": load, "aux_loss": aux_loss}

@@ -1,0 +1,1 @@
+from . import bst, embedding  # noqa: F401

@@ -1,0 +1,41 @@
+"""Sparse embedding substrate for recsys: big tables + bag lookups.
+
+JAX has no ``nn.EmbeddingBag`` — lookups are ``jnp.take`` and bag reduces are
+``segment_sum``-style ops; the TPU hot path is ``kernels.ops.bag_lookup``
+(vocab-tiled Pallas kernel).  Tables shard row-wise over the ``model`` mesh
+axis; GeoLayer's DHD heat over row access frequencies decides which hot rows
+get replicated (distributed/geo_sharding.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...kernels import ops
+from ..layers import Params
+
+__all__ = ["table_init", "lookup", "bag_lookup"]
+
+
+def table_init(key, vocab: int, dim: int, scale: float = 0.05) -> jnp.ndarray:
+    return jax.random.normal(key, (vocab, dim), jnp.float32) * scale
+
+
+def lookup(table: jnp.ndarray, ids: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Plain row gather (single-id fields)."""
+    return table.astype(dtype)[ids]
+
+
+def bag_lookup(
+    table: jnp.ndarray,
+    ids: jnp.ndarray,  # [B, L] multi-hot bags
+    weights: Optional[jnp.ndarray] = None,
+    mode: str = "sum",
+    dtype=jnp.bfloat16,
+) -> jnp.ndarray:
+    """EmbeddingBag via the kernel dispatcher (ref path on CPU)."""
+    out = ops.bag_lookup(table, ids, weights, mode=mode)
+    return out.astype(dtype)

@@ -1,0 +1,135 @@
+"""Batched serving engine with continuous batching (slot-based).
+
+A fixed pool of B decode slots shares stacked KV caches; new requests are
+prefilled into free slots while other slots keep decoding (one engine step =
+at most one prefill + one batched decode).  Retired slots return their
+tokens.  This is the serving counterpart of the paper's online mode: the
+request router (GeoGraphStore) picks the serving site; this engine is what
+runs inside each site.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as tf
+
+__all__ = ["Request", "ServeConfig", "Engine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [len] token ids
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    n_slots: int = 4
+    max_len: int = 128
+    eos_id: int = -1  # -1: never stop early
+    greedy: bool = True
+
+
+class Engine:
+    def __init__(self, params: Any, cfg: tf.LMConfig, scfg: ServeConfig) -> None:
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.slots: List[Optional[Request]] = [None] * scfg.n_slots
+        self.pos = np.zeros(scfg.n_slots, dtype=np.int32)
+        self.budget = np.zeros(scfg.n_slots, dtype=np.int32)
+        self.caches = self._empty_caches()
+        self.queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, t, c, pos: tf.decode(p, t, c, pos, cfg)
+        )
+        self._prefill = jax.jit(lambda p, t: tf.prefill(p, t, cfg))
+
+    def _empty_caches(self):
+        c = self.cfg
+        b, s = self.scfg.n_slots, self.scfg.max_len
+        if c.mla:
+            return {
+                "c_kv": jnp.zeros((c.n_layers, b, s, c.kv_lora_rank), c.dtype),
+                "k_rope": jnp.zeros((c.n_layers, b, s, c.qk_rope_dim), c.dtype),
+            }
+        return {
+            "k": jnp.zeros((c.n_layers, b, c.n_kv_heads, s, c.hd), c.dtype),
+            "v": jnp.zeros((c.n_layers, b, c.n_kv_heads, s, c.hd), c.dtype),
+        }
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> List[Request]:
+        """One engine iteration; returns requests completed this step."""
+        self._admit()
+        finished: List[Request] = []
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if active:
+            tokens = np.zeros(self.scfg.n_slots, dtype=np.int32)
+            for i in active:
+                r = self.slots[i]
+                tokens[i] = (
+                    r.out_tokens[-1] if r.out_tokens else int(r.prompt[-1])
+                )
+            logits, self.caches = self._decode(
+                self.params,
+                jnp.asarray(tokens),
+                self.caches,
+                jnp.asarray(self.pos),
+            )
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            for i in active:
+                r = self.slots[i]
+                tok = int(nxt[i])
+                r.out_tokens.append(tok)
+                self.pos[i] += 1
+                self.budget[i] -= 1
+                if (
+                    self.budget[i] <= 0
+                    or tok == self.scfg.eos_id
+                    or self.pos[i] >= self.scfg.max_len - 1
+                ):
+                    r.done = True
+                    finished.append(r)
+                    self.slots[i] = None
+        return finished
+
+    def _admit(self) -> None:
+        """Prefill queued requests into free slots (one per step per slot)."""
+        for i in range(self.scfg.n_slots):
+            if self.slots[i] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            plen = len(req.prompt)
+            _, pc = self._prefill(self.params, jnp.asarray(req.prompt)[None])
+            # write the prefilled cache into slot i (pad to max_len)
+            def write(c_all, c_new):
+                pad = self.scfg.max_len - c_new.shape[-2]
+                widths = [(0, 0)] * c_new.ndim
+                widths[-2] = (0, pad)
+                padded = jnp.pad(c_new, widths)[:, 0]  # drop batch dim
+                return c_all.at[:, i].set(padded)
+
+            self.caches = jax.tree_util.tree_map(write, self.caches, pc)
+            self.slots[i] = req
+            self.pos[i] = plen
+            self.budget[i] = req.max_new_tokens
+
+    def run_to_completion(self, max_steps: int = 1000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_steps):
+            done.extend(self.step())
+            if not self.queue and all(s is None for s in self.slots):
+                break
+        return done

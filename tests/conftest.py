@@ -1,0 +1,36 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def paper_env():
+    from repro.core.latency import make_paper_env
+
+    return make_paper_env()
+
+
+@pytest.fixture(scope="session")
+def small_setup():
+    """Shared small graph + workload (session-scoped: placement is costly)."""
+    from repro.core.graph import build_csr
+    from repro.core.latency import make_paper_env
+    from repro.core.patterns import Workload, generate_khop_patterns
+    from repro.data.synthetic import make_benchmark_graph
+
+    g = make_benchmark_graph("wiki", n_dcs=4, seed=0)
+    env = make_paper_env()
+    csr = build_csr(g.n_nodes, g.src, g.dst, symmetrize=True)
+    pats = generate_khop_patterns(g, csr, 40, seed=1, n_dcs=env.n_dcs)
+    wl = Workload.from_patterns(pats, g.n_items, env.n_dcs)
+    return g, env, csr, wl, pats
+
+
+@pytest.fixture(scope="session")
+def small_store(small_setup):
+    from repro.core.placement import PlacementConfig
+    from repro.core.store import GeoGraphStore
+
+    g, env, csr, wl, pats = small_setup
+    return GeoGraphStore(
+        g, env, wl, config=PlacementConfig(precache=True, dhd_steps=8)
+    )

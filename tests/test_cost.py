@@ -1,0 +1,81 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import (
+    PlacementState,
+    association_penalty,
+    read_cost,
+    storage_cost,
+    total_cost,
+    write_cost,
+)
+from repro.core.latency import make_paper_env
+from repro.core.patterns import Pattern
+
+
+def _mini(seed=0, n_items=10, D=3):
+    rng = np.random.default_rng(seed)
+    env = make_paper_env()
+    sizes = rng.random(n_items).astype(np.float32) * 100
+    r = rng.random((n_items, env.n_dcs)) * (rng.random((n_items, env.n_dcs)) < 0.4)
+    w = rng.random((n_items, env.n_dcs)) * 0.2 * (r > 0)
+    st_ = PlacementState.empty(n_items, env.n_dcs)
+    prim = rng.integers(0, env.n_dcs, n_items)
+    st_.delta[np.arange(n_items), prim] = True
+    st_.route_nearest(env, sizes)
+    return env, sizes, r, w, st_
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000))
+def test_costs_nonnegative(seed):
+    env, sizes, r, w, state = _mini(seed)
+    assert storage_cost(state, sizes, env) >= 0
+    assert read_cost(state, r, sizes, env) >= 0
+    assert write_cost(state, w, sizes, env) >= 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000))
+def test_more_replicas_monotone(seed):
+    """Adding a replica: storage+write up, read down (nearest routing)."""
+    env, sizes, r, w, state = _mini(seed)
+    s0 = storage_cost(state, sizes, env)
+    r0 = read_cost(state, r, sizes, env)
+    w0 = write_cost(state, w, sizes, env)
+    state2 = state.copy()
+    state2.delta[:, 0] = True  # replicate everything at DC 0
+    state2.route_nearest(env, sizes)
+    assert storage_cost(state2, sizes, env) >= s0
+    assert write_cost(state2, w, sizes, env) >= w0
+    assert read_cost(state2, r, sizes, env) <= r0 + 1e-12
+
+
+def test_full_local_pattern_no_assoc_penalty():
+    env = make_paper_env()
+    n = 4
+    sizes = np.ones(n, np.float32)
+    state = PlacementState.empty(n, env.n_dcs)
+    state.delta[:, 2] = True
+    state.route_nearest(env, sizes)
+    p = Pattern(0, np.arange(n), r_py=np.eye(env.n_dcs)[2] * 5, w_py=np.zeros(env.n_dcs))
+    # all items at the requesting DC -> sum(rho)=1 -> zero penalty (Eq. 5)
+    assert association_penalty([p], state, sizes, env) == 0.0
+
+
+def test_assoc_penalty_grows_with_spread():
+    env = make_paper_env()
+    n = 4
+    sizes = np.ones(n, np.float32)
+    st1 = PlacementState.empty(n, env.n_dcs)
+    st1.delta[:, 1] = True
+    st1.route_nearest(env, sizes)
+    st2 = PlacementState.empty(n, env.n_dcs)
+    for i in range(n):
+        st2.delta[i, i % env.n_dcs] = True
+    st2.route_nearest(env, sizes)
+    p = Pattern(0, np.arange(n), r_py=np.eye(env.n_dcs)[0] * 5, w_py=np.zeros(env.n_dcs))
+    assert association_penalty([p], st2, sizes, env) > association_penalty(
+        [p], st1, sizes, env
+    )

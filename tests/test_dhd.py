@@ -1,0 +1,87 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dhd
+
+
+def _random_sym_adj(rng, n, p=0.3):
+    a = (rng.random((n, n)) < p).astype(np.float32) * rng.random((n, n)).astype(np.float32)
+    a = np.triu(a, 1)
+    return a + a.T
+
+
+def test_dense_vs_edges_equivalence():
+    rng = np.random.default_rng(0)
+    n = 12
+    adj = _random_sym_adj(rng, n)
+    iu, iv = np.nonzero(np.triu(adj, 1))
+    w = adj[iu, iv]
+    heat = jnp.asarray(rng.random(n), jnp.float32)
+    q = jnp.asarray(rng.random(n) * 0.1, jnp.float32)
+    out_d = dhd.dhd_step_dense(heat, jnp.asarray(adj), q)
+    out_e = dhd.dhd_step_edges(
+        heat, jnp.asarray(iu, jnp.int32), jnp.asarray(iv, jnp.int32),
+        jnp.asarray(w), q, n,
+    )
+    np.testing.assert_allclose(np.asarray(out_d), np.asarray(out_e), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_theorem1_convergence_under_bound(seed):
+    """Theorem 1: alpha < gamma/((1-gamma)||L||_inf) -> unique fixed point;
+    fixed-point iteration matches the direct linear solve."""
+    rng = np.random.default_rng(seed)
+    n = 8
+    adj = _random_sym_adj(rng, n, p=0.5)
+    heat0 = jnp.asarray(rng.random(n), jnp.float32)
+    gamma, beta = 0.1, 0.3
+    l_dir = dhd.build_l_dir(heat0, jnp.asarray(adj))
+    alpha_max = dhd.convergence_alpha_bound(l_dir, gamma)
+    alpha = min(0.9 * alpha_max, 10.0)
+    q = jnp.asarray(rng.random(n) * 0.1, jnp.float32)
+    # fixed point of H -> (1-g)(H + a L H) + b q  with L *frozen* (Theorem 1)
+    h_lin = dhd.linear_steady_state(l_dir, q, alpha, gamma, beta)
+    h = heat0
+    for _ in range(3000):
+        h_new = (1 - gamma) * (h + alpha * (l_dir @ h)) + beta * q
+        if float(jnp.max(jnp.abs(h_new - h))) < 1e-9:
+            h = h_new
+            break
+        h = h_new
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_lin), rtol=1e-3, atol=1e-5)
+
+
+def test_heat_flows_hot_to_cold():
+    # two nodes: all flow from hot to cold, never negative
+    heat = jnp.asarray([1.0, 0.0])
+    out = dhd.dhd_step_edges(
+        heat, jnp.asarray([0]), jnp.asarray([1]), jnp.asarray([1.0]),
+        jnp.zeros(2), 2, alpha=0.5, gamma=0.0, beta=0.0,
+    )
+    assert out[0] < 1.0 and out[1] > 0.0
+    # conservation when gamma=0 and no sources
+    assert abs(float(out.sum()) - 1.0) < 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_no_flow_between_equal_heat(seed):
+    rng = np.random.default_rng(seed)
+    n = 6
+    heat = jnp.full((n,), 0.7, jnp.float32)
+    src = jnp.asarray(rng.integers(0, n, 10), jnp.int32)
+    dst = jnp.asarray((rng.integers(1, n, 10) + np.asarray(src)) % n, jnp.int32)
+    out = dhd.dhd_step_edges(
+        heat, src, dst, jnp.ones(10), jnp.zeros(n), n, gamma=0.0, beta=0.0
+    )
+    np.testing.assert_allclose(np.asarray(out), 0.7, rtol=1e-6)
+
+
+def test_source_decay():
+    q0 = jnp.asarray([1.0, 0.0])
+    q1 = dhd.source_heat(q0, jnp.asarray(0), half_life=2.0)
+    q2 = dhd.source_heat(q0, jnp.asarray(2), half_life=2.0)
+    assert float(q2[0]) == pytest.approx(float(q1[0]) / 2.0, rel=1e-5)

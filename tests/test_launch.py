@@ -1,0 +1,92 @@
+"""Launcher-module tests: mesh construction errors, roofline math, dry-run
+artifact schema (consumes the checked-in results when present)."""
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.launch import roofline
+from repro.launch.roofline import _parse_collectives
+
+
+def test_mesh_requires_devices():
+    from repro.launch.mesh import make_production_mesh
+
+    with pytest.raises(RuntimeError):
+        make_production_mesh()  # 1 CPU device < 256
+
+
+def test_collective_parser():
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(bf16[1,1024]{1,0} %x), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}
+  %ar = f32[128]{0} all-reduce(f32[128]{0} %y), replica_groups=[2,16]<=[32], to_apply=%add
+    """
+    out = _parse_collectives(hlo)
+    assert out["all-gather"]["count"] == 1
+    ag_bytes = 16 * 1024 * 2
+    assert out["all-gather"]["tensor_bytes"] == ag_bytes
+    assert out["all-gather"]["wire_bytes"] == pytest.approx(ag_bytes * 15 / 16)
+    assert out["all-reduce"]["count"] == 1
+    assert out["all-reduce"]["wire_bytes"] == pytest.approx(2 * 128 * 4 * 15 / 16)
+
+
+def test_model_flops_positive():
+    for arch, shape, fam in [
+        ("yi-6b", "train_4k", "lm"),
+        ("deepseek-v2-lite-16b", "prefill_32k", "lm"),
+        ("gemma3-27b", "decode_32k", "lm"),
+        ("egnn", "molecule", "gnn"),
+        ("equiformer-v2", "ogb_products", "gnn"),
+        ("bst", "retrieval_cand", "recsys"),
+    ]:
+        mf = roofline.model_flops(arch, shape, fam)
+        assert mf is not None and mf > 0
+
+
+def test_moe_active_flops_below_total():
+    from repro.configs import get_arch
+
+    cfg = get_arch("deepseek-v2-lite-16b").cfg
+    assert cfg.active_param_count() < cfg.param_count()
+
+
+@pytest.mark.skipif(
+    not glob.glob(os.path.join(roofline.RESULTS_DIR, "dryrun_single_*.json")),
+    reason="dry-run artifacts not present",
+)
+def test_dryrun_artifacts_complete():
+    """All 40 cells present per mesh; live cells carry the analysis fields."""
+    for mesh in ("single", "multi"):
+        files = glob.glob(
+            os.path.join(roofline.RESULTS_DIR, f"dryrun_{mesh}_*.json")
+        )
+        if not files:
+            continue
+        assert len(files) == 40
+        n_skip = 0
+        for f in files:
+            with open(f) as fh:
+                r = json.load(fh)
+            if r.get("skipped"):
+                n_skip += 1
+                continue
+            assert r.get("ok"), (f, r.get("error"))
+            assert r["production"]["flops_per_device"] >= 0
+            assert "collectives" in r["production"]
+        assert n_skip == 4  # long_500k on the 4 full-attention LMs
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(roofline.RESULTS_DIR, "roofline.json")),
+    reason="roofline not generated",
+)
+def test_roofline_rows():
+    rows = roofline.load_all("single")
+    live = [r for r in rows if not r.get("skipped")]
+    assert len(live) == 36
+    for r in live:
+        assert r["compute_s"] >= 0 and r["memory_s"] >= 0 and r["collective_s"] >= 0
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert 0 <= r["roofline_fraction"] <= 1.0 + 1e-9

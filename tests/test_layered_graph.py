@@ -1,0 +1,67 @@
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph, weakly_connected_components
+from repro.core.latency import make_paper_env
+from repro.core.layered_graph import build_layered_graph
+
+
+def _toy():
+    # 6 vertices across 3 DCs; cross edges with different latencies
+    g = Graph.from_edges(
+        6,
+        src=[0, 2, 1, 3, 0],
+        dst=[1, 3, 2, 4, 5],
+        partition=[0, 0, 1, 1, 2, 2],
+    )
+    return g
+
+
+def test_wcc():
+    lab = weakly_connected_components(5, np.array([0, 3]), np.array([1, 4]))
+    assert lab[0] == lab[1]
+    assert lab[3] == lab[4]
+    assert lab[0] != lab[2] != lab[3]
+
+
+def test_edge_layers_monotone(small_setup):
+    g, env, *_ = small_setup
+    lg = build_layered_graph(g, env)
+    # intra-DC edges at layer 0; cross edges in 1..h
+    cross = g.partition[g.src] != g.partition[g.dst]
+    assert (lg.edge_layer[~cross] == 0).all()
+    assert (lg.edge_layer[cross] >= 1).all()
+    # mean latency increases with layer (where layers are populated)
+    lat = [lg.mean_layer_latency[i] for i in range(1, lg.n_layers + 1)
+           if (lg.edge_layer == i).any()]
+    assert all(a < b for a, b in zip(lat, lat[1:]))
+
+
+def test_components_coarsen(small_setup):
+    g, env, *_ = small_setup
+    lg = build_layered_graph(g, env)
+    for i in range(1, lg.n_layers + 1):
+        n_prev = len(np.unique(lg.comp_of_dc[i - 1]))
+        n_cur = len(np.unique(lg.comp_of_dc[i]))
+        assert n_cur <= n_prev  # merging only
+
+
+def test_bridge_subgraph_edges_match_layer(small_setup):
+    g, env, *_ = small_setup
+    lg = build_layered_graph(g, env)
+    for i in range(1, lg.n_layers + 1):
+        for b in lg.layers[i]:
+            assert (lg.edge_layer[b.edge_ids] == i).all()
+            assert b.n_dcs >= 1
+            # children were distinct comps at i-1
+            assert len(set(b.children)) == len(b.children)
+
+
+def test_layer_for_latency(small_setup):
+    g, env, *_ = small_setup
+    lg = build_layered_graph(g, env)
+    assert lg.layer_for_latency(0.0001) == 1
+    assert lg.layer_for_latency(10.0) == lg.n_layers
+    # monotone
+    ls = [lg.layer_for_latency(x) for x in [0.01, 0.11, 0.21, 0.5]]
+    assert ls == sorted(ls)

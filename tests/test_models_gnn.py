@@ -1,0 +1,112 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.gnn.egnn import egnn_forward, egnn_init
+from repro.models.gnn.equiformer_v2 import EqV2Spec, eqv2_forward, eqv2_init
+from repro.models.gnn.meshgraphnet import mgn_forward, mgn_init
+from repro.models.gnn.schnet import schnet_forward, schnet_init
+
+
+def _batch(seed=0, n=24, e=64, d=8):
+    rng = np.random.default_rng(seed)
+    return dict(
+        x=jnp.asarray(rng.standard_normal((n, d)), jnp.float32),
+        pos=jnp.asarray(rng.standard_normal((n, 3)), jnp.float32),
+        edge_src=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        edge_dst=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        edge_mask=jnp.ones((e,), bool),
+        edge_attr=jnp.asarray(rng.standard_normal((e, 4)), jnp.float32),
+    )
+
+
+def _rot(seed=1):
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.standard_normal((3, 3)))
+    if np.linalg.det(q) < 0:
+        q[:, 0] *= -1
+    return q
+
+
+def test_egnn_equivariance():
+    b = _batch()
+    p = egnn_init(jax.random.PRNGKey(0), 8, 16, 3, d_edge=4)
+    h1, x1 = egnn_forward(p, b, 3)
+    r = _rot()
+    b2 = dict(b, pos=jnp.asarray(np.asarray(b["pos"]) @ r.T, jnp.float32))
+    h2, x2 = egnn_forward(p, b2, 3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=5e-3)
+    np.testing.assert_allclose(np.asarray(x1) @ r.T, np.asarray(x2), atol=5e-3)
+
+
+def test_schnet_invariance():
+    b = _batch()
+    b["x"] = jnp.asarray(np.random.default_rng(0).integers(0, 8, 24))
+    p = schnet_init(jax.random.PRNGKey(0), 8, 16, 2, 16)
+    o1 = schnet_forward(p, b, 2, 16, 5.0)
+    r = _rot()
+    b2 = dict(b, pos=jnp.asarray(np.asarray(b["pos"]) @ r.T, jnp.float32))
+    o2 = schnet_forward(p, b2, 2, 16, 5.0)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def test_eqv2_invariance_lmax6():
+    rng = np.random.default_rng(0)
+    spec = EqV2Spec(n_layers=2, channels=16, l_max=6, m_max=2, n_heads=4,
+                    n_rbf=8, n_species=10)
+    p = eqv2_init(jax.random.PRNGKey(0), spec)
+    n, e = 16, 48
+    b = dict(
+        x=jnp.asarray(rng.integers(0, 10, n)),
+        pos=jnp.asarray(rng.standard_normal((n, 3)), jnp.float32),
+        edge_src=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        edge_dst=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        edge_mask=jnp.ones((e,), bool),
+    )
+    o1 = eqv2_forward(p, b, spec)
+    r = _rot(3)
+    b2 = dict(b, pos=jnp.asarray(np.asarray(b["pos"]) @ r.T, jnp.float32))
+    o2 = eqv2_forward(p, b2, spec)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_eqv2_chunked_consistency():
+    rng = np.random.default_rng(1)
+    spec = EqV2Spec(n_layers=2, channels=8, l_max=3, m_max=2, n_heads=2,
+                    n_rbf=8, n_species=10)
+    p = eqv2_init(jax.random.PRNGKey(0), spec)
+    n, e = 16, 64
+    b = dict(
+        x=jnp.asarray(rng.integers(0, 10, n)),
+        pos=jnp.asarray(rng.standard_normal((n, 3)), jnp.float32),
+        edge_src=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        edge_dst=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        edge_mask=jnp.ones((e,), bool),
+    )
+    o1 = eqv2_forward(p, b, spec)
+    o2 = eqv2_forward(p, b, spec, edge_chunks=8)
+    o3 = eqv2_forward(p, b, spec, unroll_layers=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o3), atol=1e-5)
+
+
+def test_mgn_masking():
+    """Masked edges contribute nothing."""
+    b = _batch()
+    p = mgn_init(jax.random.PRNGKey(0), 8, 4, 16, 3, 2)
+    def fwd(batch):
+        pos = batch["pos"]
+        rel = pos[batch["edge_dst"]] - pos[batch["edge_src"]]
+        nrm = jnp.linalg.norm(rel, axis=-1, keepdims=True)
+        return mgn_forward(p, dict(batch, edge_attr=jnp.concatenate([rel, nrm], -1)))
+    o1 = fwd(b)
+    # zero out half the edges via mask vs physically removing them
+    e = b["edge_src"].shape[0]
+    mask = jnp.asarray(np.arange(e) < e // 2)
+    o2 = fwd(dict(b, edge_mask=mask))
+    b3 = dict(b, edge_src=b["edge_src"][: e // 2], edge_dst=b["edge_dst"][: e // 2],
+              edge_mask=jnp.ones((e // 2,), bool))
+    o3 = fwd(b3)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(o3), atol=1e-4)
+    assert not np.allclose(np.asarray(o1), np.asarray(o2))

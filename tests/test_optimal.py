@@ -1,0 +1,49 @@
+import numpy as np
+import pytest
+
+from repro.core.cost import total_cost
+from repro.core.latency import make_paper_env
+from repro.core.optimal import solve_coordinate_descent, solve_exact_tiny
+from repro.core.patterns import Pattern, Workload
+
+
+def _tiny():
+    env = make_paper_env()
+    D = env.n_dcs
+    n_items = 4
+    pats = [
+        Pattern(0, np.array([0, 1]), r_py=np.eye(D)[1] * 50, w_py=np.zeros(D)),
+        Pattern(1, np.array([2, 3]), r_py=np.eye(D)[3] * 30, w_py=np.eye(D)[3] * 2),
+    ]
+    wl = Workload.from_patterns(pats, n_items, D)
+    sizes = np.full(n_items, 100.0, np.float32)
+    primary = np.array([0, 0, 2, 2])
+    return env, wl, sizes, primary
+
+
+def test_coordinate_descent_improves():
+    env, wl, sizes, primary = _tiny()
+    from repro.core.cost import PlacementState
+
+    base = PlacementState.empty(wl.n_items, env.n_dcs)
+    base.delta[np.arange(wl.n_items), primary] = True
+    base.route_nearest(env, sizes)
+    c_base = total_cost(wl.patterns, base, wl.r_xy, wl.w_xy, sizes, env).total
+    state, c_opt = solve_coordinate_descent(wl, env, sizes, primary, max_rounds=3)
+    assert c_opt <= c_base + 1e-12
+    # solution keeps primaries
+    assert state.delta[np.arange(wl.n_items), primary].all()
+
+
+def test_exact_enumeration_improves_on_baseline():
+    env, wl, sizes, primary = _tiny()
+    from repro.core.cost import PlacementState
+
+    base = PlacementState.empty(wl.n_items, env.n_dcs)
+    base.delta[np.arange(wl.n_items), primary] = True
+    base.route_nearest(env, sizes)
+    c_base = total_cost(wl.patterns, base, wl.r_xy, wl.w_xy, sizes, env).total
+    state, c_star = solve_exact_tiny(wl, env, sizes, primary, max_enum_items=4)
+    # the do-nothing assignment is in the enumeration -> never worse
+    assert c_star <= c_base + 1e-12
+    assert state.delta[np.arange(wl.n_items), primary].all()

@@ -1,0 +1,55 @@
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import build_csr
+from repro.core.patterns import (
+    Pattern,
+    Workload,
+    decompose_overlap_regions,
+    generate_khop_patterns,
+    region_adjacency,
+)
+from repro.data.synthetic import make_benchmark_graph
+
+
+def test_khop_patterns_valid(small_setup):
+    g, env, csr, wl, pats = small_setup
+    for p in pats:
+        assert len(p.items) > 0
+        verts = p.items[p.items < g.n_nodes]
+        edges = p.items[p.items >= g.n_nodes] - g.n_nodes
+        assert (verts < g.n_nodes).all()
+        assert (edges < g.n_edges).all()
+        assert p.read_rate > 0
+        assert 0 < p.eta <= 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 100))
+def test_overlap_regions_partition(seed):
+    """Venn regions partition the union of pattern items (disjoint + cover)."""
+    rng = np.random.default_rng(seed)
+    n_items = 60
+    pats = [
+        Pattern(i, np.unique(rng.integers(0, n_items, 15)),
+                r_py=np.ones(2), w_py=np.zeros(2))
+        for i in range(4)
+    ]
+    regions = decompose_overlap_regions(pats, n_items)
+    all_items = np.unique(np.concatenate([p.items for p in pats]))
+    region_items = np.concatenate([r.items for r in regions])
+    assert len(region_items) == len(np.unique(region_items))  # disjoint
+    assert set(region_items) == set(all_items)  # cover
+    # each region's key matches membership exactly
+    for r in regions:
+        for x in r.items:
+            member = tuple(sorted(p.pid for p in pats if x in set(p.items.tolist())))
+            assert member == r.key
+
+
+def test_aggregate_frequencies(small_setup):
+    g, env, csr, wl, pats = small_setup
+    # per-item frequency = sum over patterns containing it
+    x = int(pats[0].items[0])
+    expect = sum(p.r_py for p in pats if x in set(p.items.tolist()))
+    np.testing.assert_allclose(wl.r_xy[x], expect)

@@ -1,0 +1,73 @@
+import numpy as np
+import pytest
+
+from repro.core.cost import total_cost
+from repro.core.layered_graph import build_layered_graph
+from repro.core.placement import (
+    HeatCache,
+    PlacedUnit,
+    PlacementConfig,
+    overlap_centric_placement,
+    replication_gain,
+)
+
+
+def test_placement_places_primaries(small_setup):
+    g, env, csr, wl, pats = small_setup
+    lg = build_layered_graph(g, env)
+    state, stats = overlap_centric_placement(
+        lg, wl, PlacementConfig(precache=False, dhd_steps=4)
+    )
+    # primary copies always present
+    assert state.delta[np.arange(g.n_nodes), g.partition].all()
+    # every accessed item has at least one replica and a route
+    accessed = np.where(wl.r_xy.sum(1) > 0)[0]
+    assert state.delta[accessed].any(axis=1).all()
+    assert (state.route[accessed] >= 0).all()
+
+
+def test_placement_reduces_cost_vs_primary_only(small_setup):
+    g, env, csr, wl, pats = small_setup
+    lg = build_layered_graph(g, env)
+    state, _ = overlap_centric_placement(
+        lg, wl, PlacementConfig(precache=False, dhd_steps=4)
+    )
+    from repro.core.cost import PlacementState
+
+    base = PlacementState.empty(g.n_items, env.n_dcs)
+    base.delta[np.arange(g.n_nodes), g.partition] = True
+    base.delta[g.n_nodes + np.arange(g.n_edges), g.partition[g.src]] = True
+    base.route_nearest(env, g.item_size())
+    sizes = g.item_size()
+    c_placed = total_cost(pats, state, wl.r_xy, wl.w_xy, sizes, env).total
+    c_base = total_cost(pats, base, wl.r_xy, wl.w_xy, sizes, env).total
+    assert c_placed < c_base
+
+
+def test_replication_gain_signs(paper_env):
+    env = paper_env
+    sizes = np.ones(20, np.float32)
+    hot = PlacedUnit(np.arange(5), r_py=np.array([0, 1000.0, 0, 0, 0]),
+                     w_py=np.zeros(5), eta=1.0, key=(0,))
+    cold = PlacedUnit(np.arange(5), r_py=np.array([0, 1e-9, 0, 0, 0]),
+                      w_py=np.full(5, 10.0), eta=1.0, key=(1,))
+    holder = np.array([0, 1])
+    children = [np.array([1])]
+    assert replication_gain(hot, holder, children, sizes, env) > 0
+    assert replication_gain(cold, holder, children, sizes, env) < 0
+
+
+def test_eviction_cools_unused(small_setup, small_store):
+    g, env, csr, wl, pats = small_setup
+    store = small_store
+    cache = store.caches[0]
+    before = cache.cached_mask().sum()
+    if before == 0:
+        pytest.skip("no cached replicas at DC0")
+    # no accesses, several decay rounds -> evictions happen
+    cache.step(n_steps=8)
+    evicted = cache.evict()
+    assert len(evicted) >= 0
+    assert not store.state.delta[evicted, 0].any()
+    # refresh routes (Alg. 3 line 10) — the session store is shared
+    store.state.route_nearest(env, g.item_size())

@@ -1,0 +1,47 @@
+import numpy as np
+import pytest
+
+from repro.core.routing import route_offline, route_online
+
+
+def test_online_routing_complete(small_setup, small_store):
+    g, env, csr, wl, pats = small_setup
+    store = small_store
+    for p in pats[:10]:
+        origin = int(np.argmax(p.r_py))
+        res = route_online(store.lg, store.state, p.items, origin)
+        assert res.n_missing == 0  # all items resolved
+        # every served item really has a replica at its serving DC
+        served = res.served_by
+        for x, d in zip(p.items, served):
+            assert store.state.delta[x, d]
+        assert res.latency_s >= 0
+
+
+def test_online_prefers_local(small_setup, small_store):
+    g, env, csr, wl, pats = small_setup
+    store = small_store
+    p = pats[0]
+    origin = int(np.argmax(p.r_py))
+    res = route_online(store.lg, store.state, p.items, origin)
+    local_avail = store.state.delta[p.items, origin]
+    assert (res.served_by[local_avail] == origin).all()
+
+
+def test_offline_layout_covers(small_setup, small_store):
+    g, env, csr, wl, pats = small_setup
+    store = small_store
+    req = np.arange(g.n_nodes)
+    plan = route_offline(store.lg, store.state, req)
+    assert (plan.item_site[req] >= 0).all()
+    assert set(np.unique(plan.item_site[req])) <= set(plan.sites.tolist())
+    assert 1 <= len(plan.sites) <= env.n_dcs
+
+
+def test_offline_migration_threshold(small_setup, small_store):
+    g, env, csr, wl, pats = small_setup
+    store = small_store
+    # more iterations -> larger message proxy -> fewer/equal retained sites
+    p1 = route_offline(store.lg, store.state, np.arange(g.n_nodes), n_iters=1)
+    p2 = route_offline(store.lg, store.state, np.arange(g.n_nodes), n_iters=500)
+    assert len(p2.sites) <= len(p1.sites)

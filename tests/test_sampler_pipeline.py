@@ -1,0 +1,69 @@
+import numpy as np
+import pytest
+
+from repro.core.graph import build_csr
+from repro.data.pipeline import Prefetcher, RecsysPipeline, TokenPipeline, shard_batch
+from repro.data.sampler import NeighborSampler, block_capacity
+from repro.data.synthetic import make_benchmark_graph
+from repro.data.partition import balanced_bfs_partition, edge_cut, hash_partition
+
+
+def test_sampler_block_valid():
+    g = make_benchmark_graph("wiki", n_dcs=4)
+    csr = build_csr(g.n_nodes, g.src, g.dst, symmetrize=True)
+    s = NeighborSampler(csr, [3, 2], seed=0)
+    seeds = np.arange(8)
+    blk = s.sample(seeds)
+    n_max, e_max = block_capacity(8, [3, 2])
+    assert blk.node_ids.shape == (n_max,)
+    assert blk.edge_src.shape == (e_max,)
+    # every real edge's endpoints are valid positions
+    es, ed = blk.edge_src[blk.edge_mask], blk.edge_dst[blk.edge_mask]
+    assert (blk.node_mask[es]).all() and (blk.node_mask[ed]).all()
+    # message edges point toward the requesting frontier node
+    real_nodes = blk.node_ids[blk.node_mask]
+    assert len(np.unique(real_nodes)) == len(real_nodes)  # dedup
+
+
+def test_pipeline_deterministic():
+    p = TokenPipeline(1000, 4, 8, seed=3)
+    a, b = p.batch_at(5), p.batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = p.batch_at(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_prefetcher_order():
+    p = TokenPipeline(100, 2, 4)
+    pf = Prefetcher(p, start_step=10)
+    s0, b0 = pf.next()
+    s1, b1 = pf.next()
+    pf.stop()
+    assert (s0, s1) == (10, 11)
+    np.testing.assert_array_equal(b0["tokens"], p.batch_at(10)["tokens"])
+
+
+def test_shard_batch():
+    p = TokenPipeline(100, 8, 4)
+    b = p.batch_at(0)
+    s0 = shard_batch(b, 0, 4)
+    s3 = shard_batch(b, 3, 4)
+    assert s0["tokens"].shape == (2, 4)
+    np.testing.assert_array_equal(s3["tokens"], b["tokens"][6:8])
+
+
+def test_bfs_partition_cut_better_than_hash():
+    g = make_benchmark_graph("snb", n_dcs=4)
+    hp = hash_partition(g.n_nodes, 4)
+    bp = balanced_bfs_partition(g.n_nodes, g.src, g.dst, 4)
+    assert edge_cut(bp, g.src, g.dst) < edge_cut(hp, g.src, g.dst)
+    # balanced within 25%
+    counts = np.bincount(bp)
+    assert counts.max() <= 1.3 * counts.min()
+
+
+def test_recsys_pipeline():
+    p = RecsysPipeline(1000, 50, 8, 10)
+    b = p.batch_at(0)
+    assert b["hist_items"].shape == (8, 10)
+    assert (b["hist_items"] < 1000).all()

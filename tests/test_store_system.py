@@ -1,0 +1,66 @@
+"""End-to-end system behaviour of the GeoGraphStore."""
+import numpy as np
+import pytest
+
+from repro.core.patterns import Pattern
+
+
+def test_constraints_hold(small_setup, small_store):
+    g, env, csr, wl, pats = small_setup
+    ok = small_store.constraints()
+    assert ok["a_route_on_replica"]
+    assert ok["a_requested_routed"]
+    assert ok["e_binary"]
+
+
+def test_geolayer_beats_baselines_cost(small_setup):
+    from repro.core.placement import PlacementConfig
+    from repro.core.store import GeoGraphStore
+
+    g, env, csr, wl, pats = small_setup
+    cfg = PlacementConfig(precache=False, dhd_steps=4)
+    c_geo = GeoGraphStore(g, env, wl, config=cfg).cost().total
+    c_rand = GeoGraphStore(g, env, wl, config=cfg, placement="random",
+                           routing="random").cost().total
+    c_top = GeoGraphStore(g, env, wl, config=cfg, placement="top",
+                          routing="random").cost().total
+    assert c_geo < c_rand
+    assert c_geo < c_top
+
+
+def test_online_latency_beats_random(small_setup, small_store):
+    import numpy as np
+
+    from repro.core.placement import PlacementConfig
+    from repro.core.store import GeoGraphStore
+
+    g, env, csr, wl, pats = small_setup
+    rand = GeoGraphStore(g, env, wl, config=PlacementConfig(precache=False, dhd_steps=4),
+                         placement="random", routing="random")
+    def mean_lat(store):
+        return np.mean([
+            store.serve_online(p, int(np.argmax(p.r_py))).latency_s for p in pats[:15]
+        ])
+    assert mean_lat(small_store) < mean_lat(rand)
+
+
+def test_delete_and_insert(small_setup):
+    from repro.core.placement import PlacementConfig
+    from repro.core.store import GeoGraphStore
+
+    g, env, csr, wl, pats = small_setup
+    store = GeoGraphStore(g, env, wl, config=PlacementConfig(precache=False, dhd_steps=4))
+    victim = pats[0].items[:3]
+    store.delete_items(victim)
+    assert not store.state.delta[victim].any()
+    # incremental insert re-places
+    newp = Pattern(999, pats[1].items, r_py=pats[1].r_py * 2, w_py=pats[1].w_py, eta=0.5)
+    store.insert_patterns([newp])
+    assert (store.state.delta[newp.items].sum(axis=1) >= 1).all()
+
+
+def test_maintain_refreshes_routing(small_setup, small_store):
+    out = small_store.maintain(evict=True)
+    assert "evicted" in out
+    ok = small_store.constraints()
+    assert ok["a_route_on_replica"]

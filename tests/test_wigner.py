@@ -1,0 +1,72 @@
+"""Property tests for the eSCN rotation machinery (validated to l_max=6)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.gnn.wigner import (
+    dir_to_angles,
+    rotate_irreps,
+    sh_real,
+    wigner_d_blocks,
+)
+
+
+def rotmat(theta, phi):
+    cz, sz = np.cos(phi), np.sin(phi)
+    cy, sy = np.cos(theta), np.sin(theta)
+    return np.array([[cz, -sz, 0], [sz, cz, 0], [0, 0, 1]]) @ np.array(
+        [[cy, 0, sy], [0, 1, 0], [-sy, 0, cy]]
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.floats(0.05, 3.09), st.floats(-3.1, 3.1),
+    st.integers(0, 10_000),
+)
+def test_wigner_rotation_property(theta, phi, seed):
+    """Defining property: sh(R v) == D(R) sh(v) for all l <= 6."""
+    l_max = 6
+    rng = np.random.default_rng(seed)
+    v = rng.standard_normal(3)
+    v /= np.linalg.norm(v)
+    r = rotmat(theta, phi)
+    sh_v = sh_real(l_max, jnp.asarray(v, jnp.float32))
+    sh_rv = sh_real(l_max, jnp.asarray(r @ v, jnp.float32))
+    blocks = wigner_d_blocks(
+        l_max, jnp.asarray(theta, jnp.float32), jnp.asarray(phi, jnp.float32)
+    )
+    pred = rotate_irreps(jnp.asarray(sh_v)[:, None], blocks)[:, 0]
+    np.testing.assert_allclose(np.asarray(pred), np.asarray(sh_rv), atol=5e-5)
+
+
+def test_orthogonality():
+    blocks = wigner_d_blocks(6, jnp.asarray(1.234, jnp.float32), jnp.asarray(-0.77, jnp.float32))
+    for l, b in enumerate(blocks):
+        b = np.asarray(b)
+        np.testing.assert_allclose(b @ b.T, np.eye(2 * l + 1), atol=2e-5)
+
+
+def test_edge_frame_alignment():
+    """D(R)^T sh(r_hat) == sh(z_hat): rotating into the edge frame."""
+    theta, phi = 0.8, -1.3
+    d = np.array([np.sin(theta) * np.cos(phi), np.sin(theta) * np.sin(phi), np.cos(theta)])
+    blocks = wigner_d_blocks(6, jnp.asarray(theta, jnp.float32), jnp.asarray(phi, jnp.float32))
+    aligned = rotate_irreps(
+        jnp.asarray(sh_real(6, jnp.asarray(d, jnp.float32)))[:, None], blocks,
+        transpose=True,
+    )[:, 0]
+    zref = sh_real(6, jnp.asarray([0.0, 0.0, 1.0], jnp.float32))
+    np.testing.assert_allclose(np.asarray(aligned), np.asarray(zref), atol=5e-5)
+
+
+def test_dir_to_angles_roundtrip():
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal((10, 3)).astype(np.float32)
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    theta, phi = dir_to_angles(jnp.asarray(v))
+    rec = np.stack(
+        [np.sin(theta) * np.cos(phi), np.sin(theta) * np.sin(phi), np.cos(theta)], 1
+    )
+    np.testing.assert_allclose(rec, v, atol=2e-3)
