@@ -1,0 +1,105 @@
+"""Dynamic-workload axis: incremental streaming updates vs full rebuild.
+
+For a 10k-vertex community graph under random churn batches (edge/vertex
+births and deaths), measures per-batch ``GeoGraphStore.apply_updates`` wall
+time against a from-scratch rebuild of the final graph (compact + layered
+graph + overlap-centric placement + reroute), plus routing parity: every
+workload pattern must resolve with the same coverage on both stores, and the
+post-churn mean online latency is reported per churn rate.
+
+CSV derived fields: ``speedup`` (rebuild / incremental, acceptance >= 5x at
+1% churn), ``miss_inc``/``miss_reb`` (total unresolved items — must match),
+``lat_inc_ms``/``lat_reb_ms`` (mean straggler latency over served patterns).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core.graph import build_csr
+from repro.core.latency import make_paper_env
+from repro.core.patterns import Workload, generate_khop_patterns
+from repro.core.placement import PlacementConfig
+from repro.core.store import GeoGraphStore
+from repro.data.synthetic import community_graph
+from repro.streaming import DeltaGraph, compact_workload, random_churn_batch
+
+from .common import csv_row, timed
+
+
+def _build_store(n_patterns: int, seed: int = 0):
+    g = community_graph(
+        10_000, n_communities=25, p_in=0.02, p_out=0.0005, seed=seed, n_dcs=5
+    )
+    env = make_paper_env()
+    csr = build_csr(g.n_nodes, g.src, g.dst, symmetrize=True)
+    pats = generate_khop_patterns(
+        g, csr, n_patterns, seed=seed + 1, n_dcs=env.n_dcs, n_hot_sources=128
+    )
+    wl = Workload.from_patterns(pats, g.n_items, env.n_dcs)
+    return GeoGraphStore(g, env, wl, config=PlacementConfig()), env
+
+
+def _serve_all(store: GeoGraphStore, seed: int = 0) -> tuple:
+    """Serve every pattern with the 65% home / 35% remote origin mix of
+    ``benchmarks.common.mean_online_latency`` (paper's cross-border mix)."""
+    rng = np.random.default_rng(seed)
+    d = store.env.n_dcs
+    miss, lats = 0, []
+    for p in store.workload.patterns:
+        if not len(p.items):
+            continue
+        home = int(np.argmax(p.r_py))
+        origin = home if rng.random() < 0.65 else int(rng.integers(0, d))
+        res = store.serve_online(p, origin)
+        miss += res.n_missing
+        lats.append(res.latency_s)
+    return miss, float(np.mean(lats)) if lats else 0.0
+
+
+def run(fast: bool = True) -> None:
+    rates = [0.01] if fast else [0.002, 0.01, 0.05]
+    n_batches = 4 if fast else 6
+    store, env = _build_store(n_patterns=240)
+    cfg = store.config
+    rng = np.random.default_rng(7)
+    store._delta_graph = DeltaGraph(store.g)
+
+    # warm the jit caches so steady-state batch cost is measured
+    for _ in range(2):
+        store.apply_updates(random_churn_batch(store._delta_graph, rates[0], rng))
+
+    for rate in rates:
+        inc_times: List[float] = []
+        for _ in range(n_batches):
+            batch = random_churn_batch(store._delta_graph, rate, rng)
+            dt, _rep = timed(store.apply_updates, batch)
+            inc_times.append(dt)
+        dt_mig, plan = timed(store.flush_migrations)
+        t_inc = float(np.median(inc_times))
+
+        # from-scratch rebuild of the *same* post-churn graph + workload
+        def rebuild():
+            gc, vmap, emap = store._delta_graph.compact()
+            wl2 = compact_workload(store.workload, store.g.n_nodes, gc, vmap, emap)
+            return GeoGraphStore(gc, env, wl2, config=cfg)
+
+        t_reb, rebuilt = timed(rebuild)
+
+        miss_inc, lat_inc = _serve_all(store)
+        miss_reb, lat_reb = _serve_all(rebuilt)
+        ok = store.constraints()
+        derived = (
+            f"speedup={t_reb / t_inc:.1f}x;miss_inc={miss_inc};miss_reb={miss_reb};"
+            f"lat_inc_ms={lat_inc * 1e3:.1f};lat_reb_ms={lat_reb * 1e3:.1f};"
+            f"migrations={plan.n_adds}+{plan.n_drops}drop;"
+            f"routing_closed={ok['a_requested_routed'] and ok['b_pattern_route_on_replica']}"
+        )
+        print(csv_row(f"streaming_apply_churn{rate:g}", t_inc * 1e6, derived))
+        print(csv_row(f"streaming_rebuild_churn{rate:g}", t_reb * 1e6, f"migrate_s={dt_mig:.3f}"))
+
+
+if __name__ == "__main__":
+    run(fast=True)

@@ -27,6 +27,7 @@ def main() -> None:
         bench_online,
         bench_optimality,
         bench_precache,
+        bench_streaming,
     )
 
     suites = {
@@ -39,6 +40,7 @@ def main() -> None:
         "fig13_15_offline": bench_offline.run,
         "fig16_ablation": bench_ablation.run,
         "kernels": bench_kernels.run,
+        "streaming": bench_streaming.run,
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

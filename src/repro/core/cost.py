@@ -54,14 +54,30 @@ class PlacementState:
     def place(self, items: np.ndarray, dc: int) -> None:
         self.delta[np.asarray(items), dc] = True
 
-    def route_nearest(self, env: GeoEnvironment, sizes: np.ndarray) -> None:
-        """Route every (item, origin) to its latency-minimal replica (Eq. 1)."""
+    def route_nearest(
+        self,
+        env: GeoEnvironment,
+        sizes: Optional[np.ndarray] = None,
+        rows: Optional[np.ndarray] = None,
+    ) -> None:
+        """Route every (item, origin) to its latency-minimal replica (Eq. 1).
+
+        ``sizes`` is unused (the per-item size term is identical across
+        candidate DCs, so RTT alone ranks them) and kept only for call-site
+        compatibility.  ``rows`` restricts the refresh to a subset of items —
+        the streaming partial-reroute path after replica-set changes."""
         lat = env.rtt_s.copy()  # [d, y]; size term identical across d per item
         np.fill_diagonal(lat, 0.0)
-        big = np.where(self.delta[:, :, None], lat[None, :, :], np.inf)  # [I,d,y]
-        self.route = np.argmin(big, axis=1).astype(np.int32)  # [I, y]
-        unplaced = ~self.delta.any(axis=1)
-        self.route[unplaced] = -1
+        delta = self.delta if rows is None else self.delta[rows]
+        if delta.shape[0] == 0:
+            return
+        big = np.where(delta[:, :, None], lat[None, :, :], np.inf)  # [I,d,y]
+        route = np.argmin(big, axis=1).astype(np.int32)  # [I, y]
+        route[~delta.any(axis=1)] = -1
+        if rows is None:
+            self.route = route
+        else:
+            self.route[rows] = route
 
 
 @dataclasses.dataclass

@@ -401,6 +401,9 @@ class HeatCache:
         self.params = params
         self.theta_c = theta_c
         self.heat = np.zeros(g.n_items, dtype=np.float32)
+        # streaming stores set this to the alive mask so diffusion never
+        # crosses tombstoned edges; None = static graph, all edges live
+        self.edge_mask: Optional[np.ndarray] = None
 
     def cached_mask(self) -> np.ndarray:
         """Replicas held at this DC beyond the primary partition copy."""
@@ -416,11 +419,15 @@ class HeatCache:
     def step(self, n_steps: int = 4) -> None:
         """Diffuse heat over the cache topology (vertex items only)."""
         n = self.g.n_nodes
+        if self.edge_mask is not None:
+            src, dst = self.g.src[self.edge_mask], self.g.dst[self.edge_mask]
+        else:
+            src, dst = self.g.src, self.g.dst
         h = dhd.diffuse_affinity(
             n,
-            self.g.src,
-            self.g.dst,
-            np.ones(self.g.n_edges, dtype=np.float32),
+            src,
+            dst,
+            np.ones(len(src), dtype=np.float32),
             self.heat[:n],
             params=self.params,
             n_steps=n_steps,

@@ -17,12 +17,12 @@ from . import baselines
 from .cost import CostBreakdown, PlacementState, check_constraints, total_cost
 from .graph import Graph, build_csr
 from .latency import GeoEnvironment
-from .layered_graph import LayeredGraph, build_layered_graph
+from .layered_graph import LayeredGraph, build_layered_graph, repair_layered_graph
 from .patterns import Pattern, Workload
 from .placement import HeatCache, PlacementConfig, overlap_centric_placement
 from .routing import OfflineLayout, RouteResult, route_offline, route_online
 
-__all__ = ["GeoGraphStore", "StoreStats"]
+__all__ = ["GeoGraphStore", "StoreStats", "UpdateReport"]
 
 
 @dataclasses.dataclass
@@ -30,6 +30,20 @@ class StoreStats:
     placement_stats: Dict[str, object]
     build_time_s: float
     placement_time_s: float
+
+
+@dataclasses.dataclass
+class UpdateReport:
+    """Outcome of one ``apply_updates`` batch."""
+
+    n_add_vertices: int
+    n_del_vertices: int
+    n_add_edges: int
+    n_del_edges: int
+    n_touched_vertices: int
+    repair: object  # core.layered_graph.RepairStats
+    heat: object  # streaming.delta_dhd.WarmStats
+    apply_time_s: float
 
 
 class GeoGraphStore:
@@ -73,6 +87,10 @@ class GeoGraphStore:
             build_time_s=t1 - t0,
             placement_time_s=t2 - t1,
         )
+        # streaming-update state (lazily materialized on first apply_updates)
+        self._delta_graph = None
+        self._heat = None
+        self._heat_scale = None
 
     # ------------------------------------------------------------ strategies
     def _place(self, name: str, seed: int) -> Tuple[PlacementState, Dict]:
@@ -103,7 +121,7 @@ class GeoGraphStore:
     def _apply_routing(self, name: str, seed: int) -> None:
         if name == "stepwise":
             # per-item table seeded nearest; pattern requests use route_online
-            self.state.route_nearest(self.env, self.g.item_size())
+            self.state.route_nearest(self.env)
         elif name == "random":
             baselines.route_random(self.state, self.workload, self.env, seed=seed)
         elif name == "greedy":
@@ -154,7 +172,7 @@ class GeoGraphStore:
             cache.step(n_steps=diffusion_steps)
             if evict:
                 evicted += len(cache.evict())
-        self.state.route_nearest(self.env, self.g.item_size())
+        self.state.route_nearest(self.env)
         return {"evicted": evicted}
 
     def delete_items(self, item_ids: np.ndarray) -> None:
@@ -173,6 +191,166 @@ class GeoGraphStore:
         self.state, pstats = self._place(self.placement_name, seed=0)
         self._apply_routing(self.routing_name, seed=0)
         self.stats.placement_stats = pstats
+
+    # ---------------------------------------------------- streaming updates
+    def _heat_inputs(self):
+        """(alive edge ids, edge weights, vertex sources) for streaming DHD.
+
+        Normalization scales are frozen at first use: the warm path only
+        rewrites *touched* ELL rows, so renormalizing by the current max each
+        batch would leave untouched rows on a stale scale and the field would
+        drift from any cold rebuild."""
+        g = self.g
+        alive_e = (
+            np.where(self._delta_graph.edge_alive)[0]
+            if self._delta_graph is not None
+            else np.arange(g.n_edges)
+        )
+        w_e = self.workload.r_xy[g.n_nodes:].sum(axis=1)[alive_e].astype(np.float32)
+        r_v = self.workload.r_xy[: g.n_nodes].sum(axis=1).astype(np.float32)
+        if self._heat_scale is None:
+            self._heat_scale = (
+                max(float(w_e.max()) if len(w_e) else 1.0, 1.0),
+                max(float(r_v.max()), 1e-12),
+            )
+        w_scale, q_scale = self._heat_scale
+        return alive_e, w_e / w_scale + 1e-3, r_v / q_scale
+
+    def _grow_item_rows(self, a: np.ndarray, old_n: int, nv: int, ne: int, fill) -> np.ndarray:
+        """Insert rows for new vertices (mid) and new edges (end) into an
+        item-indexed [I, D] array, preserving the v | e id layout."""
+        mid = np.full((nv, a.shape[1]), fill, dtype=a.dtype)
+        end = np.full((ne, a.shape[1]), fill, dtype=a.dtype)
+        return np.concatenate([a[:old_n], mid, a[old_n:], end])
+
+    def apply_updates(self, batch) -> UpdateReport:
+        """Absorb one :class:`~repro.streaming.MutationBatch` incrementally.
+
+        Instead of the full rebuild path (``build_layered_graph`` +
+        ``overlap_centric_placement`` + global reroute) this: grows the
+        delta-CSR overlay, repairs only the invalidated latency layers,
+        deposits primary replicas for new items / purges dead ones, reroutes
+        exactly the touched rows, and warm-starts DHD from the previous
+        equilibrium.  Replica migration is deferred to
+        :meth:`flush_migrations` so bursts of batches amortize one move-set.
+        """
+        from ..streaming.delta_dhd import StreamingHeat
+        from ..streaming.migration import _reroute_items
+        from ..streaming.mutation_log import DeltaGraph
+
+        t0 = time.perf_counter()
+        if self._delta_graph is None:
+            self._delta_graph = DeltaGraph(self.g)
+        dg = self._delta_graph
+        if batch.n_ops == 0:  # no-op batch: skip repair/heat entirely
+            return UpdateReport(0, 0, 0, 0, 0, None, None, time.perf_counter() - t0)
+        res = dg.apply(batch)
+        g2 = dg.g
+        old_n = res.old_n_nodes
+        nv, ne = res.n_new_vertices, len(res.new_edge_ids)
+
+        # --- remap item-indexed state to the shifted id space -------------
+        self.state.delta = self._grow_item_rows(self.state.delta, old_n, nv, ne, False)
+        self.state.route = self._grow_item_rows(self.state.route, old_n, nv, ne, -1)
+        wl = self.workload
+        r2 = self._grow_item_rows(wl.r_xy, old_n, nv, ne, 0.0)
+        w2 = self._grow_item_rows(wl.w_xy, old_n, nv, ne, 0.0)
+        dead_items = res.dead_item_ids(g2.n_nodes)
+        dead_mask = np.zeros(g2.n_items, dtype=bool)
+        dead_mask[dead_items] = True
+        pats = []
+        for p in wl.patterns:
+            items = res.remap_items(p.items)
+            items = items[~dead_mask[items]]
+            pats.append(Pattern(pid=p.pid, items=items, r_py=p.r_py, w_py=p.w_py, eta=p.eta))
+        self.workload = Workload(
+            patterns=pats, n_items=g2.n_items, n_dcs=wl.n_dcs, r_xy=r2, w_xy=w2
+        )
+        for cache in self.caches.values():
+            cache.g = g2
+            cache.edge_mask = dg.edge_alive
+            cache.heat = np.concatenate(
+                [cache.heat[:old_n], np.zeros(nv, np.float32),
+                 cache.heat[old_n:], np.zeros(ne, np.float32)]
+            )
+        self.g = g2
+
+        # --- incremental layered-graph repair ----------------------------
+        self.lg, rstats = repair_layered_graph(self.lg, g2, dg.edge_alive)
+
+        # --- primaries for new items, bottom-up delete cleanup -----------
+        if nv:
+            self.state.delta[res.new_vertex_ids, g2.partition[res.new_vertex_ids]] = True
+        if ne:
+            e = res.new_edge_ids
+            self.state.delta[g2.n_nodes + e, g2.partition[g2.src[e]]] = True
+        self.state.delta[dead_items] = False
+        self.state.route[dead_items] = -1
+        r2[dead_items] = 0.0
+        w2[dead_items] = 0.0
+
+        # --- reroute only the rows whose replica sets changed -------------
+        changed = np.unique(np.concatenate([res.new_item_ids(g2.n_nodes), dead_items]))
+        _reroute_items(self.state, self.env, changed)
+
+        # --- warm-start DHD over the alive topology -----------------------
+        # Migration planning only *ranks* items by heat, so the store runs a
+        # bounded relaxation budget per batch instead of iterating to full
+        # tolerance: the field stays continuously near-equilibrium across the
+        # batch stream (any leftover residual is worked off by later batches).
+        # The StreamingHeat defaults remain exact for standalone users.
+        if self._heat is None:
+            self._heat = StreamingHeat(tol=1e-5, max_iters=32)
+        alive_e, w_e, q = self._heat_inputs()
+        hstats = self._heat.update(
+            g2.n_nodes, g2.src[alive_e], g2.dst[alive_e], w_e, q,
+            touched=res.touched_vertices,
+        )
+        return UpdateReport(
+            n_add_vertices=nv,
+            n_del_vertices=len(res.dead_vertex_ids),
+            n_add_edges=ne,
+            n_del_edges=len(res.dead_edge_ids),
+            n_touched_vertices=len(res.touched_vertices),
+            repair=rstats,
+            heat=hstats,
+            apply_time_s=time.perf_counter() - t0,
+        )
+
+    def flush_migrations(self, budget_bytes: Optional[float] = None, **kw):
+        """Plan + apply the cost-bounded replica move-set for the heat drift
+        accumulated since the last flush.  Returns the
+        :class:`~repro.streaming.MigrationPlan` (with ``rolled_back`` set if
+        the constraint guard reverted drops)."""
+        from ..streaming.delta_dhd import StreamingHeat
+        from ..streaming.migration import apply_plan, plan_migrations
+
+        sizes = self.g.item_size()
+        if budget_bytes is None:
+            budget_bytes = 0.05 * float(sizes.sum())
+        if self._heat is None or self._heat.heat is None:
+            # never churned: cold-solve the equilibrium once
+            self._heat = StreamingHeat()
+            alive_e, w_e, q = self._heat_inputs()
+            self._heat.rebuild(self.g.n_nodes, self.g.src[alive_e], self.g.dst[alive_e], w_e, q)
+        vheat = self._heat.vertex_heat
+        eheat = 0.5 * (vheat[self.g.src] + vheat[self.g.dst])
+        if self._delta_graph is not None:
+            item_alive = np.concatenate(
+                [self._delta_graph.node_alive, self._delta_graph.edge_alive]
+            )
+        else:
+            item_alive = np.ones(self.g.n_items, dtype=bool)
+        item_heat = np.concatenate([vheat, eheat]) * item_alive
+        plan = plan_migrations(
+            self.g, self.env, self.state, self.workload.r_xy, self.workload.w_xy,
+            item_heat, budget_bytes, item_alive=item_alive, **kw,
+        )
+        apply_plan(
+            plan, self.state, self.env, self.workload.patterns,
+            self.workload.r_xy, sizes, self.config.gamma_max_s,
+        )
+        return plan
 
     # -------------------------------------------------------------- costing
     def cost(self) -> CostBreakdown:

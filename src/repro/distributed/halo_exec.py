@@ -33,6 +33,18 @@ from ..core.graph import Graph
 __all__ = ["HaloProgram", "build_halo_program", "run_message_passing", "exchange_stats"]
 
 
+def _resolve_shard_map():
+    """shard_map moved from jax.experimental to the jax namespace (and the
+    replication-check kwarg was renamed check_rep -> check_vma) across JAX
+    releases; resolve whichever this install provides."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm, "check_vma"
+    from jax.experimental.shard_map import shard_map as sm_exp
+
+    return sm_exp, "check_rep"
+
+
 @dataclasses.dataclass
 class HaloProgram:
     """Static plan for shard_map halo message passing over a partition.
@@ -171,12 +183,14 @@ def run_message_passing(
         )
         return x + jnp.tanh(agg / jnp.maximum(deg, 1.0)[:, None])
 
+    shard_map_fn, check_kw = _resolve_shard_map()
+
     @partial(
-        jax.shard_map,
+        shard_map_fn,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis)),
         out_specs=P(axis),
-        check_vma=False,
+        **{check_kw: False},
     )
     def run(x, send_idx, send_mask, e_src, e_dst, e_mask):
         x, send_idx = x[0], send_idx[0]

@@ -1,0 +1,200 @@
+"""Cost-bounded replica migration from heat deltas (tentpole, part 4).
+
+After a churn batch shifts the DHD equilibrium, the placement is stale in two
+directions: newly-hot items are missing replicas near their readers, and
+previously-hot replicas have gone cold.  The planner turns the heat field
+into a move-set:
+
+  * **adds** — hot items (heat >= the ``theta_add`` quantile) gain a replica
+    at requesting DCs where the per-window read saving beats the added
+    storage + write-sync cost (the Eq. 13 surrogate at item granularity);
+    each add ships ``size`` bytes over the WAN.
+  * **drops** — cold replicas (heat < ``theta_drop`` of the max) that are
+    neither the primary copy, nor the sole replica, nor read locally, are
+    released for free.
+
+Adds are taken greedily by benefit-per-WAN-byte under ``budget_bytes``
+(the paper's migration condition ξ, Eq. 14, as a byte budget).  Application
+re-routes exactly the touched items and is guarded by
+:func:`repro.core.cost.check_constraints`: a plan never turns a previously
+satisfied constraint into a violation — offending drops are rolled back.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.cost import PlacementState, check_constraints
+from ..core.latency import GeoEnvironment
+
+__all__ = ["Move", "MigrationPlan", "plan_migrations", "apply_plan"]
+
+
+@dataclasses.dataclass
+class Move:
+    item: int
+    dc: int
+    kind: str  # "add" | "drop"
+    benefit: float  # $/window cost saving (surrogate)
+    wan_bytes: float  # bytes shipped to realize the move
+
+
+@dataclasses.dataclass
+class MigrationPlan:
+    moves: List[Move]
+    wan_bytes: float
+    est_benefit: float
+    n_candidates: int
+    skipped_budget: int  # adds skipped (byte budget exhausted or move cap)
+    rolled_back: int = 0  # drops reverted by the constraint guard
+
+    @property
+    def n_adds(self) -> int:
+        return sum(1 for m in self.moves if m.kind == "add")
+
+    @property
+    def n_drops(self) -> int:
+        return sum(1 for m in self.moves if m.kind == "drop")
+
+
+def _primary_dcs(g) -> np.ndarray:
+    return np.concatenate([g.partition, g.partition[g.src]]).astype(np.int64)
+
+
+def plan_migrations(
+    g,
+    env: GeoEnvironment,
+    state: PlacementState,
+    r_xy: np.ndarray,
+    w_xy: np.ndarray,
+    item_heat: np.ndarray,
+    budget_bytes: float,
+    theta_add: float = 0.80,
+    theta_drop: float = 0.05,
+    max_moves: int = 1024,
+    item_alive: Optional[np.ndarray] = None,
+) -> MigrationPlan:
+    """Propose a move-set; pure planning, no state mutation."""
+    sizes = g.item_size()
+    I, D = r_xy.shape
+    alive = (
+        np.ones(I, dtype=bool) if item_alive is None else np.asarray(item_alive, bool)
+    )
+    primary = _primary_dcs(g)
+    heat = np.asarray(item_heat, np.float64)
+    hmax = float(heat[alive].max(initial=0.0))
+    moves: List[Move] = []
+    n_cand = 0
+
+    # ------------------------------------------------------------- drops
+    if hmax > 0:
+        cold = alive & (heat < theta_drop * hmax)
+    else:
+        cold = np.zeros(I, dtype=bool)
+    n_replicas = state.delta.sum(axis=1)
+    drop_cands: List[Move] = []
+    for x in np.where(cold & (n_replicas > 1))[0]:
+        # only replicas no origin currently reads from are free to drop —
+        # a replica serving remote origins would push their reads to a
+        # farther DC, a read-cost increase the drop benefit doesn't model
+        serving = np.unique(state.route[x][r_xy[x] > 0])
+        for d in np.where(state.delta[x])[0]:
+            d = int(d)
+            if d == primary[x] or d in serving:
+                continue
+            n_cand += 1
+            benefit = float(sizes[x]) * float(env.c_store[d]) + float(
+                (w_xy[x] * (env.c_write[d] + sizes[x] * env.c_net[:, d])).sum()
+            )
+            drop_cands.append(Move(int(x), d, "drop", benefit, 0.0))
+    # keep the move-set minimal: highest-value drops first, at most half the
+    # cap so adds keep room in the move-set
+    drop_cands.sort(key=lambda m: m.benefit, reverse=True)
+    moves.extend(drop_cands[: max_moves // 2])
+
+    # -------------------------------------------------------------- adds
+    pos = heat[alive & (heat > 0)]
+    theta = float(np.quantile(pos, theta_add)) if len(pos) else np.inf
+    hot = alive & (heat >= theta) & (heat > 0)
+    add_cands: List[Move] = []
+    for x in np.where(hot)[0]:
+        sx = float(sizes[x])
+        w_sync = w_xy[x]
+        for d in np.where((r_xy[x] > 0) & ~state.delta[x])[0]:
+            d = int(d)
+            cur = int(state.route[x, d])
+            if cur < 0:
+                cur = int(primary[x])
+            n_cand += 1
+            read_save = float(r_xy[x, d]) * sx * float(env.c_net[cur, d])
+            store_add = sx * float(env.c_store[d])
+            write_add = float(
+                (w_sync * (env.c_write[d] + sx * env.c_net[:, d])).sum()
+            )
+            benefit = read_save - store_add - write_add
+            if benefit > 0:
+                add_cands.append(Move(int(x), d, "add", benefit, sx))
+
+    # greedy knapsack by benefit density under the WAN byte budget
+    add_cands.sort(key=lambda m: m.benefit / max(m.wan_bytes, 1e-9), reverse=True)
+    wan = 0.0
+    skipped = 0
+    for m in add_cands:
+        if len(moves) >= max_moves:
+            skipped += 1
+            continue
+        if wan + m.wan_bytes > budget_bytes:
+            skipped += 1
+            continue
+        wan += m.wan_bytes
+        moves.append(m)
+
+    return MigrationPlan(
+        moves=moves,
+        wan_bytes=wan,
+        est_benefit=float(sum(m.benefit for m in moves)),
+        n_candidates=n_cand,
+        skipped_budget=skipped,
+    )
+
+
+def _reroute_items(
+    state: PlacementState, env: GeoEnvironment, rows: np.ndarray
+) -> None:
+    """Partial Eq. 1 nearest-replica refresh for just ``rows``."""
+    state.route_nearest(env, sizes=None, rows=np.asarray(rows))
+
+
+def apply_plan(
+    plan: MigrationPlan,
+    state: PlacementState,
+    env: GeoEnvironment,
+    patterns: Sequence,
+    r_xy: np.ndarray,
+    sizes: np.ndarray,
+    gamma_max_s: float,
+) -> Dict[str, bool]:
+    """Apply the plan with a constraint guard; returns the final check flags.
+
+    Invariant: no constraint that held before application is violated after —
+    adds only widen the replica sets, and drops are rolled back wholesale if
+    the post-check regresses.
+    """
+    before = check_constraints(patterns, state, r_xy, sizes, env, gamma_max_s)
+    touched = np.unique([m.item for m in plan.moves]).astype(np.int64)
+    for m in plan.moves:
+        state.delta[m.item, m.dc] = m.kind == "add"
+    _reroute_items(state, env, touched)
+    after = check_constraints(patterns, state, r_xy, sizes, env, gamma_max_s)
+    if any(before[k] and not after[k] for k in before):
+        drops = [m for m in plan.moves if m.kind == "drop"]
+        for m in drops:
+            state.delta[m.item, m.dc] = True
+        _reroute_items(state, env, touched)
+        plan.rolled_back = len(drops)
+        plan.moves = [m for m in plan.moves if m.kind == "add"]
+        plan.est_benefit = float(sum(m.benefit for m in plan.moves))
+        after = check_constraints(patterns, state, r_xy, sizes, env, gamma_max_s)
+    return after

@@ -1,0 +1,291 @@
+"""Streaming-update subsystem: delta overlay, incremental layer repair,
+warm-started DHD, and the cost-bounded migration planner."""
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph, build_csr
+from repro.core.latency import make_paper_env, make_synthetic_env
+from repro.core.layered_graph import build_layered_graph, repair_layered_graph
+from repro.core.patterns import Workload, generate_khop_patterns
+from repro.core.placement import PlacementConfig
+from repro.core.store import GeoGraphStore
+from repro.streaming import (
+    DeltaGraph,
+    MutationLog,
+    StreamingHeat,
+    compact_workload,
+    random_churn_batch,
+)
+
+
+def _random_graph(n, m, n_dcs, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    return Graph.from_edges(
+        n, src[keep], dst[keep], partition=rng.integers(0, n_dcs, n)
+    ), rng
+
+
+# ------------------------------------------------------------- delta overlay
+def test_delta_csr_matches_rebuilt_csr():
+    g, rng = _random_graph(120, 600, 4, 0)
+    dg = DeltaGraph(g)
+    for _ in range(3):
+        batch = random_churn_batch(dg, 0.08, rng)
+        dg.apply(batch)
+    # overlay adjacency == CSR rebuilt from the alive edge list, per vertex
+    alive = np.where(dg.edge_alive)[0]
+    ref = build_csr(
+        dg.g.n_nodes, dg.g.src[alive], dg.g.dst[alive],
+        weights=alive.astype(np.float32),
+    )
+    for u in range(dg.g.n_nodes):
+        nbr, eid = dg.adj.out_edges(u, dg.edge_alive)
+        lo, hi = int(ref.indptr[u]), int(ref.indptr[u + 1])
+        assert sorted(eid.tolist()) == sorted(ref.weights[lo:hi].astype(int).tolist())
+        assert sorted(nbr.tolist()) == sorted(ref.indices[lo:hi].tolist())
+
+
+def test_delta_graph_tombstones_cascade():
+    g, _ = _random_graph(30, 200, 3, 1)
+    dg = DeltaGraph(g)
+    log = MutationLog(g.n_nodes)
+    victim = 7
+    log.delete_vertex(victim)
+    res = dg.apply(log.seal())
+    assert not dg.node_alive[victim]
+    incident = (dg.g.src == victim) | (dg.g.dst == victim)
+    assert not dg.edge_alive[incident].any()
+    assert set(np.where(incident)[0]) == set(res.dead_edge_ids.tolist())
+
+
+def test_mutation_log_provisional_vertex_ids():
+    g, _ = _random_graph(20, 60, 2, 2)
+    dg = DeltaGraph(g)
+    log = MutationLog(g.n_nodes)
+    v = log.add_vertex(partition=1)
+    assert v == g.n_nodes
+    log.add_edge(v, 3)
+    res = dg.apply(log.seal())
+    assert dg.g.n_nodes == g.n_nodes + 1
+    e = res.new_edge_ids[0]
+    assert (int(dg.g.src[e]), int(dg.g.dst[e])) == (v, 3)
+
+
+# -------------------------------------------------- incremental layer repair
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_incremental_repair_matches_rebuild(seed):
+    """Randomized churn: repaired layered graph == from-scratch rebuild."""
+    env = make_synthetic_env(8, "high", seed=seed)
+    g, rng = _random_graph(250, 1200, 8, seed + 10)
+    lg = build_layered_graph(g, env)
+    dg = DeltaGraph(g)
+    for _ in range(4):
+        batch = random_churn_batch(dg, 0.06, rng)
+        dg.apply(batch)
+        lg, stats = repair_layered_graph(lg, dg.g, dg.edge_alive)
+        gc, vmap, emap = dg.compact()
+        ref = build_layered_graph(gc, env, thresholds_s=lg.thresholds_s)
+
+        # same layer per alive edge
+        alive = np.where(dg.edge_alive)[0]
+        assert np.array_equal(lg.edge_layer[alive], ref.edge_layer[emap[alive]])
+        assert (lg.edge_layer[~dg.edge_alive] == -1).all()
+        # identical DC components at every layer
+        assert np.array_equal(lg.comp_of_dc, ref.comp_of_dc)
+        # identical bridge subgraphs (edge sets compared through the id map)
+        def canon(l, use_emap):
+            out = set()
+            for layer in l.layers:
+                for b in layer:
+                    edges = emap[b.edge_ids] if use_emap else b.edge_ids
+                    out.add((
+                        b.layer, b.comp, frozenset(int(e) for e in edges),
+                        tuple(sorted(int(d) for d in b.dcs)),
+                        tuple(sorted(b.children)),
+                    ))
+            return out
+        assert canon(lg, True) == canon(ref, False)
+        np.testing.assert_allclose(
+            lg.mean_layer_latency, ref.mean_layer_latency, rtol=1e-12
+        )
+
+
+def test_repair_relevels_only_dirty_layers():
+    """A batch confined to existing DC pairs must not relabel any layer; a
+    batch opening a brand-new DC pair must relabel from that layer up."""
+    env = make_synthetic_env(6, "high", seed=4)
+    rng = np.random.default_rng(5)
+    # two DC islands: {0,1,2} and {3,4,5} with no cross-island edges
+    n = 60
+    part = np.concatenate([rng.integers(0, 3, n // 2), rng.integers(3, 6, n // 2)])
+    src, dst = [], []
+    for _ in range(300):
+        u, v = rng.integers(0, n // 2, 2)
+        if u != v:
+            src.append(u), dst.append(v)
+    for _ in range(300):
+        u, v = rng.integers(n // 2, n, 2)
+        if u != v:
+            src.append(u), dst.append(v)
+    g = Graph.from_edges(n, src, dst, partition=part)
+    lg = build_layered_graph(g, env)
+    dg = DeltaGraph(g)
+
+    # duplicate an existing edge: layer membership changes, pairs don't
+    log = MutationLog(n)
+    log.add_edge(int(g.src[0]), int(g.dst[0]))
+    dg.apply(log.seal())
+    lg, stats = repair_layered_graph(lg, dg.g, dg.edge_alive)
+    assert stats.first_dirty is None
+
+    # bridge the islands: a new DC pair appears -> relabel from its layer
+    u = int(np.where(part[: n // 2] == 0)[0][0])
+    v = int(n // 2 + np.where(part[n // 2:] == 3)[0][0])
+    log = MutationLog(n)
+    log.add_edge(u, v)
+    dg.apply(log.seal())
+    lg, stats = repair_layered_graph(lg, dg.g, dg.edge_alive)
+    assert stats.first_dirty is not None
+    assert stats.relabeled_layers >= 1
+    gc, vmap, emap = dg.compact()
+    ref = build_layered_graph(gc, env, thresholds_s=lg.thresholds_s)
+    assert np.array_equal(lg.comp_of_dc, ref.comp_of_dc)
+    # the islands are now merged at the top layer
+    assert len(np.unique(lg.comp_of_dc[lg.n_layers])) == 1
+
+
+# --------------------------------------------------------------- warm DHD
+def test_warm_dhd_matches_cold_steady_state():
+    g, rng = _random_graph(200, 900, 4, 7)
+    w = rng.uniform(0.1, 1.0, g.n_edges).astype(np.float32)
+    q = rng.uniform(0.0, 1.0, g.n_nodes).astype(np.float32)
+
+    sh = StreamingHeat()
+    cold0 = sh.rebuild(g.n_nodes, g.src, g.dst, w, q)
+    assert cold0 < sh.max_iters  # converged
+
+    # mutate: drop 30 edges, add 30 edges
+    dead = rng.choice(g.n_edges, 30, replace=False)
+    keep = np.ones(g.n_edges, bool)
+    keep[dead] = False
+    ns = rng.integers(0, g.n_nodes, 30)
+    nd = (ns + 1 + rng.integers(0, g.n_nodes - 1, 30)) % g.n_nodes
+    nw = rng.uniform(0.1, 1.0, 30).astype(np.float32)
+    src2 = np.concatenate([g.src[keep], ns.astype(np.int32)])
+    dst2 = np.concatenate([g.dst[keep], nd.astype(np.int32)])
+    w2 = np.concatenate([w[keep], nw])
+    touched = np.unique(np.concatenate([g.src[dead], g.dst[dead], ns, nd]))
+
+    stats = sh.update(g.n_nodes, src2, dst2, w2, q, touched)
+    ref = StreamingHeat()
+    ref_iters = ref.rebuild(g.n_nodes, src2, dst2, w2, q)
+
+    np.testing.assert_allclose(sh.vertex_heat, ref.vertex_heat, atol=1e-4)
+    # warm start converges in no more sweeps than the cold solve
+    assert stats.global_iters <= ref_iters
+
+
+def test_warm_dhd_handles_vertex_growth():
+    g, rng = _random_graph(150, 500, 3, 8)
+    w = np.ones(g.n_edges, np.float32)
+    q = rng.uniform(0.0, 1.0, g.n_nodes).astype(np.float32)
+    sh = StreamingHeat()
+    sh.rebuild(g.n_nodes, g.src, g.dst, w, q)
+    n2 = g.n_nodes + 5
+    ns = np.arange(g.n_nodes, n2, dtype=np.int32)
+    nd = rng.integers(0, g.n_nodes, 5).astype(np.int32)
+    src2 = np.concatenate([g.src, ns])
+    dst2 = np.concatenate([g.dst, nd])
+    w2 = np.concatenate([w, np.ones(5, np.float32)])
+    q2 = np.concatenate([q, rng.uniform(0.0, 1.0, 5).astype(np.float32)])
+    sh.update(n2, src2, dst2, w2, q2, touched=np.concatenate([ns, nd]))
+    ref = StreamingHeat()
+    ref.rebuild(n2, src2, dst2, w2, q2)
+    np.testing.assert_allclose(sh.vertex_heat, ref.vertex_heat, atol=1e-4)
+
+
+# ------------------------------------------------------------- store + plan
+@pytest.fixture(scope="module")
+def churned_store():
+    g = _random_graph(220, 1400, 4, 11)[0]
+    env = make_paper_env()
+    csr = build_csr(g.n_nodes, g.src, g.dst, symmetrize=True)
+    pats = generate_khop_patterns(g, csr, 24, seed=3, n_dcs=env.n_dcs)
+    wl = Workload.from_patterns(pats, g.n_items, env.n_dcs)
+    store = GeoGraphStore(
+        g, env, wl, config=PlacementConfig(precache=False, dhd_steps=4)
+    )
+    rng = np.random.default_rng(12)
+    store._delta_graph = DeltaGraph(store.g)
+    reports = [
+        store.apply_updates(random_churn_batch(store._delta_graph, 0.02, rng))
+        for _ in range(3)
+    ]
+    return store, reports
+
+
+def test_apply_updates_keeps_routing_closed(churned_store):
+    """After churn every pattern stays fully servable and the routing/
+    placement invariants (constraints a/b/e) hold."""
+    store, reports = churned_store
+    ok = store.constraints()
+    assert ok["a_route_on_replica"]
+    assert ok["a_requested_routed"]
+    assert ok["b_pattern_route_on_replica"]
+    for p in store.workload.patterns:
+        if not len(p.items):
+            continue
+        res = store.serve_online(p, int(np.argmax(p.r_py)))
+        assert res.n_missing == 0
+
+
+def test_apply_updates_matches_full_rebuild_coverage(churned_store):
+    """Incremental maintenance serves the same workload as a from-scratch
+    rebuild of the final graph: same coverage, cost of the same order."""
+    store, _ = churned_store
+    gc, vmap, emap = store._delta_graph.compact()
+    wl2 = compact_workload(store.workload, store.g.n_nodes, gc, vmap, emap)
+    rebuilt = GeoGraphStore(
+        gc, store.env, wl2, config=PlacementConfig(precache=False, dhd_steps=4)
+    )
+    for p_inc, p_reb in zip(store.workload.patterns, rebuilt.workload.patterns):
+        if not len(p_inc.items):
+            continue
+        origin = int(np.argmax(p_inc.r_py))
+        r_inc = store.serve_online(p_inc, origin)
+        r_reb = rebuilt.serve_online(p_reb, origin)
+        assert r_inc.n_missing == r_reb.n_missing == 0
+        assert len(p_inc.items) == len(p_reb.items)
+
+
+def test_layered_graph_stays_rebuild_identical_in_store(churned_store):
+    store, _ = churned_store
+    gc, vmap, emap = store._delta_graph.compact()
+    ref = build_layered_graph(gc, store.env, thresholds_s=store.lg.thresholds_s)
+    assert np.array_equal(store.lg.comp_of_dc, ref.comp_of_dc)
+
+
+def test_flush_migrations_budget_and_constraints(churned_store):
+    store, _ = churned_store
+    sizes = store.g.item_size()
+    before = store.constraints()
+    budget = 0.01 * float(sizes.sum())
+    plan = store.flush_migrations(budget_bytes=budget)
+    assert plan.wan_bytes <= budget + 1e-9
+    after = store.constraints()
+    for k, held in before.items():
+        if held:
+            assert after[k], f"migration regressed constraint {k}"
+    # every add landed, every drop (net of rollbacks) cleared
+    for m in plan.moves:
+        assert store.state.delta[m.item, m.dc] == (m.kind == "add")
+
+
+def test_flush_migrations_zero_budget_adds_nothing(churned_store):
+    store, _ = churned_store
+    plan = store.flush_migrations(budget_bytes=0.0)
+    assert plan.n_adds == 0
+    assert plan.wan_bytes == 0.0
