@@ -27,6 +27,7 @@ def main() -> None:
         bench_online,
         bench_optimality,
         bench_precache,
+        bench_serving,
         bench_streaming,
     )
 
@@ -41,6 +42,7 @@ def main() -> None:
         "fig16_ablation": bench_ablation.run,
         "kernels": bench_kernels.run,
         "streaming": bench_streaming.run,
+        "serving": bench_serving.run,
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -10,6 +10,7 @@ from . import (  # noqa: F401
     optimal,
     patterns,
     placement,
+    route_index,
     routing,
     store,
 )

@@ -19,6 +19,7 @@ __all__ = [
     "build_ell",
     "weakly_connected_components",
     "subgraph_edges",
+    "grow_item_rows",
 ]
 
 
@@ -228,3 +229,21 @@ def weakly_connected_components(
 def subgraph_edges(g: Graph, edge_mask: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     """Return (src, dst) of the edges selected by ``edge_mask``."""
     return g.src[edge_mask], g.dst[edge_mask]
+
+
+def grow_item_rows(
+    a: np.ndarray, old_n_nodes: int, n_new_vertices: int, n_new_edges: int, fill
+) -> np.ndarray:
+    """Grow an item-indexed array for a mutation batch, preserving the
+    ``vertex v -> v, edge e -> n_nodes + e`` id layout: new-vertex rows are
+    inserted *mid* (end of the vertex block, shifting every edge item id by
+    ``n_new_vertices``) and new-edge rows appended at the end.
+
+    This is the single encoding of the id-space shift — placement rows, the
+    route index and heat caches must all grow through it so their rows stay
+    aligned.  Works for 1-D ([I] fields) and 2-D ([I, D] tables) arrays.
+    """
+    tail = a.shape[1:]
+    mid = np.full((n_new_vertices, *tail), fill, dtype=a.dtype)
+    end = np.full((n_new_edges, *tail), fill, dtype=a.dtype)
+    return np.concatenate([a[:old_n_nodes], mid, a[old_n_nodes:], end])

@@ -31,7 +31,7 @@ def _route_optimal(
 ) -> None:
     """Optimal routing given delta: nearest replica minimizes both Eq. 3's
     cross-DC cost and Eq. 1 latency (c_read uniform across DCs here)."""
-    state.route_nearest(env, sizes)
+    state.route_nearest(env)
 
 
 def solve_exact_tiny(

@@ -343,7 +343,7 @@ def overlap_centric_placement(
             max_per_dc=cfg.precache_max_per_dc,
         )
 
-    state.route_nearest(env, sizes)
+    state.route_nearest(env)
     return state, stats
 
 
@@ -413,8 +413,11 @@ class HeatCache:
         return self.state.delta[:, self.dc] & ~primary
 
     def observe(self, item_ids: np.ndarray, freq: float = 1.0) -> None:
-        """External heat injection: one access event batch (Alg. 3 lines 3-5)."""
-        self.heat[np.asarray(item_ids)] += freq
+        """External heat injection: one access event batch (Alg. 3 lines 3-5).
+
+        Duplicate ids accumulate (``serve_batch`` concatenates per-origin
+        request items), which fancy-index ``+=`` would silently collapse."""
+        np.add.at(self.heat, np.asarray(item_ids), freq)
 
     def step(self, n_steps: int = 4) -> None:
         """Diffuse heat over the cache topology (vertex items only)."""

@@ -24,7 +24,13 @@ from .graph import Graph
 from .latency import GeoEnvironment
 from .layered_graph import LayeredGraph
 
-__all__ = ["RouteResult", "route_online", "OfflineLayout", "route_offline"]
+__all__ = [
+    "RouteResult",
+    "route_online",
+    "route_online_batch",
+    "OfflineLayout",
+    "route_offline",
+]
 
 
 # ------------------------------------------------------------------- online
@@ -92,6 +98,126 @@ def route_online(
         layers_used=layers_used,
         n_missing=int((served < 0).sum()),
     )
+
+
+def route_online_batch(
+    lg: LayeredGraph,
+    state: PlacementState,
+    requests: Sequence[Tuple[np.ndarray, int]],
+    sizes: Optional[np.ndarray] = None,
+) -> List[RouteResult]:
+    """Bottom-up expanding retrieval for a whole request batch at once.
+
+    ``requests`` is a sequence of ``(items, origin)`` pairs.  Per request the
+    outcome is identical to :func:`route_online` (same greedy max-coverage,
+    same lowest-DC-id tie-break), but the batch is resolved with flat array
+    ops: per layer, coverage counts for *all* requests are one segment-sum
+    ``[R, D]`` and the per-request greedy pick is one masked argmax — the
+    per-pattern Python loops collapse into a handful of numpy passes whose
+    count is bounded by the layer's cluster width, not the batch size.
+    """
+    env = lg.env
+    if sizes is None:
+        sizes = lg.g.item_size()
+    R = len(requests)
+    if R == 0:
+        return []
+    lens = np.asarray([len(np.asarray(it)) for it, _ in requests], dtype=np.int64)
+    origin = np.asarray([int(o) for _, o in requests], dtype=np.int64)
+    items_all = (
+        np.concatenate([np.asarray(it, dtype=np.int64) for it, _ in requests])
+        if lens.sum()
+        else np.zeros(0, dtype=np.int64)
+    )
+    req_id = np.repeat(np.arange(R, dtype=np.int64), lens)
+    K = len(items_all)
+    ar_K = np.arange(K)
+    ar_R = np.arange(R)
+    served = np.full(K, -1, dtype=np.int64)
+    layers_used = np.zeros(R, dtype=np.int64)
+    D = env.n_dcs
+    # one gather of the batch's replica rows; every greedy pass reuses it
+    delta_all = state.delta[items_all]  # [K, D]
+    org_all = origin[req_id]
+
+    # Layer_0: local items first
+    local = delta_all[ar_K, org_all]
+    served[local] = org_all[local]
+
+    missing_per_req = np.bincount(req_id[served < 0], minlength=R)
+    for layer in range(1, lg.n_layers + 1):
+        active = missing_per_req > 0
+        if not active.any():
+            break
+        comp = lg.comp_of_dc[layer]  # [D]
+        allowed = comp[origin][:, None] == comp[None, :]  # [R, D]
+        allowed[ar_R, origin] = False
+        # route_online marks a layer "used" whenever its cluster is non-empty
+        # for a still-unresolved request, even if nothing is found there
+        has_cluster = allowed.any(axis=1)
+        layers_used[active & has_cluster] = layer
+        # greedy max-coverage, all active requests in lockstep: each pass
+        # computes every request's best cluster DC and assigns its hits —
+        # requests are independent, so lockstep == per-request greedy
+        while True:
+            miss = served < 0
+            if not miss.any():
+                break
+            # segment-sum coverage per request: D bincounts beat a slow
+            # ufunc.at scatter (D is a handful, the batch is the long axis)
+            cover = np.stack(
+                [
+                    np.bincount(req_id, weights=delta_all[:, d] * miss, minlength=R)
+                    for d in range(D)
+                ],
+                axis=1,
+            )
+            cover[~allowed] = 0.0
+            best = np.argmax(cover, axis=1)  # lowest-id tie-break, like route_online
+            gain = cover[ar_R, best]
+            progress = gain > 0
+            if not progress.any():
+                break
+            hit = miss & progress[req_id] & delta_all[ar_K, best[req_id]]
+            served[hit] = best[req_id[hit]]
+        missing_per_req = np.bincount(req_id[served < 0], minlength=R)
+
+    # resolved latency per (request, DC): served bytes -> Eq. 1, vectorized
+    srv = served >= 0
+    flat = req_id[srv] * D + served[srv]  # (request, serving DC) pair key
+    bytes_rd = np.bincount(
+        flat, weights=sizes[items_all[srv]], minlength=R * D
+    ).reshape(R, D)
+    served_mask = np.zeros(R * D, dtype=bool)
+    served_mask[flat] = True
+    served_mask = served_mask.reshape(R, D)
+    lat_rd = env.rtt_s[:, origin].T + bytes_rd / env.bw_Bps_safe()[:, origin].T
+    lat_rd[ar_R, origin] = 0.0  # local serving is free (Eq. 1)
+    straggler = np.where(served_mask, lat_rd, -np.inf).max(axis=1)
+    straggler[~served_mask.any(axis=1)] = 0.0
+    n_miss = np.bincount(req_id[~srv], minlength=R) if (~srv).any() else np.zeros(R, np.int64)
+
+    # per-request materialization: all (r, dc) pairs at once, no np.unique
+    rr, dd = np.nonzero(served_mask)  # row-major: grouped by request
+    pair_lat = lat_rd[rr, dd]
+    pair_bounds = np.concatenate([[0], np.cumsum(np.bincount(rr, minlength=R))])
+    results: List[RouteResult] = []
+    bounds = np.concatenate([[0], np.cumsum(lens)])
+    for r in range(R):
+        lo, hi = pair_bounds[r], pair_bounds[r + 1]
+        results.append(
+            RouteResult(
+                served_by=served[bounds[r] : bounds[r + 1]],
+                dcs=dd[lo:hi],
+                latency_s=float(straggler[r]),
+                per_dc_latency=dict(
+                    zip(dd[lo:hi].tolist(), pair_lat[lo:hi].tolist())
+                ),
+                layers_used=int(layers_used[r]),
+                n_missing=int(n_miss[r]),
+            )
+        )
+    return results
 
 
 # ------------------------------------------------------------------ offline

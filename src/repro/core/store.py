@@ -15,12 +15,19 @@ import numpy as np
 
 from . import baselines
 from .cost import CostBreakdown, PlacementState, check_constraints, total_cost
-from .graph import Graph, build_csr
+from .graph import Graph, build_csr, grow_item_rows
 from .latency import GeoEnvironment
 from .layered_graph import LayeredGraph, build_layered_graph, repair_layered_graph
 from .patterns import Pattern, Workload
 from .placement import HeatCache, PlacementConfig, overlap_centric_placement
-from .routing import OfflineLayout, RouteResult, route_offline, route_online
+from .route_index import RouteIndex
+from .routing import (
+    OfflineLayout,
+    RouteResult,
+    route_offline,
+    route_online,
+    route_online_batch,
+)
 
 __all__ = ["GeoGraphStore", "StoreStats", "UpdateReport"]
 
@@ -44,6 +51,15 @@ class UpdateReport:
     repair: object  # core.layered_graph.RepairStats
     heat: object  # streaming.delta_dhd.WarmStats
     apply_time_s: float
+    compacted: bool = False  # tombstone-ratio compaction fired this batch
+
+    @property
+    def heat_residual(self) -> float:
+        """Staleness carried over by the budgeted warm DHD solve: the sup-norm
+        change one more sweep would make.  ~0 means the field is at its
+        equilibrium; larger values mean later batches / ``maintain()`` still
+        owe relaxation work (the operator-visible drift metric)."""
+        return float(getattr(self.heat, "residual", 0.0) or 0.0)
 
 
 class GeoGraphStore:
@@ -64,6 +80,7 @@ class GeoGraphStore:
         routing: str = "stepwise",
         latency_interval_s: float = 0.100,
         seed: int = 0,
+        compact_ratio: float = 0.30,
     ) -> None:
         self.g = g
         self.env = env
@@ -71,6 +88,8 @@ class GeoGraphStore:
         self.config = config or PlacementConfig()
         self.placement_name = placement
         self.routing_name = routing
+        self.compact_ratio = compact_ratio
+        self.route_index: Optional[RouteIndex] = None
         t0 = time.perf_counter()
         self.lg: LayeredGraph = build_layered_graph(
             g, env, latency_interval_s=latency_interval_s
@@ -119,9 +138,14 @@ class GeoGraphStore:
         raise ValueError(f"unknown placement {name!r}")
 
     def _apply_routing(self, name: str, seed: int) -> None:
+        self.route_index = None
         if name == "stepwise":
-            # per-item table seeded nearest; pattern requests use route_online
-            self.state.route_nearest(self.env)
+            # per-item table seeded nearest; pattern requests use route_online.
+            # The RouteIndex owns the table from here on: ``state.route``
+            # aliases ``index.nearest`` so incremental patches are visible to
+            # every consumer without copies.
+            self.route_index = RouteIndex.build(self.state.delta, self.env)
+            self.state.route = self.route_index.nearest
         elif name == "random":
             baselines.route_random(self.state, self.workload, self.env, seed=seed)
         elif name == "greedy":
@@ -139,6 +163,36 @@ class GeoGraphStore:
         # record accesses into the origin's heat cache (Alg. 3 injection)
         self.caches[origin].observe(pattern.items, freq=1.0)
         return res
+
+    def serve_batch(
+        self,
+        requests: Sequence[Tuple[object, int]],
+        observe: bool = True,
+    ) -> List[RouteResult]:
+        """Serve a whole batch of online requests in one vectorized pass.
+
+        ``requests`` is a sequence of ``(pattern_or_items, origin)`` pairs;
+        results align with the input order and match ``serve_online``
+        request-for-request.  Stepwise routing resolves the batch through
+        :func:`route_online_batch` (flat ``[R, I]`` array ops per layer);
+        table-driven strategies fall back to per-request table lookups.
+        """
+        norm: List[Tuple[np.ndarray, int]] = []
+        for req, origin in requests:
+            items = req.items if isinstance(req, Pattern) else np.asarray(req)
+            norm.append((items, int(origin)))
+        if self.routing_name == "stepwise":
+            results = route_online_batch(self.lg, self.state, norm)
+        else:
+            results = [self._route_by_table(it, o) for it, o in norm]
+        if observe and norm:
+            # heat injection grouped per origin: one observe() per DC touched
+            by_origin: Dict[int, List[np.ndarray]] = {}
+            for items, o in norm:
+                by_origin.setdefault(o, []).append(items)
+            for o, groups in by_origin.items():
+                self.caches[o].observe(np.concatenate(groups))
+        return results
 
     def _route_by_table(self, items: np.ndarray, origin: int) -> RouteResult:
         sizes = self.g.item_size()
@@ -164,21 +218,52 @@ class GeoGraphStore:
         )
 
     # ---------------------------------------------------------- maintenance
-    def maintain(self, evict: bool = True, diffusion_steps: int = 4) -> Dict[str, int]:
+    def _resync_route_index(self) -> None:
+        """Re-adopt the routing table if external code orphaned the alias.
+
+        A direct full ``state.route_nearest(env)`` *replaces* ``state.route``
+        with a fresh array, silently detaching it from ``route_index.nearest``.
+        Stepwise routing's invariant is nearest-replica routing, so the index
+        re-derives from the placement and takes ownership back."""
+        if self.route_index is not None and self.state.route is not self.route_index.nearest:
+            self.route_index.rebuild(self.state.delta)
+            self.state.route = self.route_index.nearest
+
+    def maintain(self, evict: bool = True, diffusion_steps: int = 4) -> Dict[str, float]:
         """Periodic maintenance: heat diffusion + cold-replica eviction
-        (Alg. 3) and routing-table refresh."""
+        (Alg. 3), routing refresh, and working off any warm-DHD residual.
+
+        With a :class:`RouteIndex` the eviction refresh patches only the rows
+        whose replica sets actually shrank; the legacy path re-derives the
+        whole table."""
+        self._resync_route_index()
         evicted = 0
-        for cache in self.caches.values():
+        for dc, cache in self.caches.items():
             cache.step(n_steps=diffusion_steps)
             if evict:
-                evicted += len(cache.evict())
-        self.state.route_nearest(self.env)
-        return {"evicted": evicted}
+                ids = cache.evict()
+                evicted += len(ids)
+                if self.route_index is not None:
+                    self.route_index.drop_replicas(self.state.delta, ids, dc)
+        if self.route_index is None:
+            self.state.route_nearest(self.env)
+        residual = 0.0
+        if self._heat is not None and self._heat.heat is not None:
+            # budgeted apply_updates sweeps may leave the heat field short of
+            # equilibrium; the maintenance window pays that debt down
+            self._heat.solve()
+            residual = self._heat.residual
+        return {"evicted": evicted, "heat_residual": residual}
 
     def delete_items(self, item_ids: np.ndarray) -> None:
         """Bottom-up delete cleanup: drop all replicas everywhere (§V)."""
-        self.state.delta[np.asarray(item_ids)] = False
-        self.state.route[np.asarray(item_ids)] = -1
+        self._resync_route_index()
+        ids = np.asarray(item_ids)
+        self.state.delta[ids] = False
+        if self.route_index is not None:
+            self.route_index.clear_rows(ids)
+        else:
+            self.state.route[ids] = -1
 
     def insert_patterns(self, new_patterns: Sequence[Pattern]) -> None:
         """Incremental update: materialize new access patterns and re-run
@@ -217,11 +302,9 @@ class GeoGraphStore:
         return alive_e, w_e / w_scale + 1e-3, r_v / q_scale
 
     def _grow_item_rows(self, a: np.ndarray, old_n: int, nv: int, ne: int, fill) -> np.ndarray:
-        """Insert rows for new vertices (mid) and new edges (end) into an
-        item-indexed [I, D] array, preserving the v | e id layout."""
-        mid = np.full((nv, a.shape[1]), fill, dtype=a.dtype)
-        end = np.full((ne, a.shape[1]), fill, dtype=a.dtype)
-        return np.concatenate([a[:old_n], mid, a[old_n:], end])
+        """Item-indexed row growth through the one shared id-layout encoding
+        (:func:`repro.core.graph.grow_item_rows`)."""
+        return grow_item_rows(a, old_n, nv, ne, fill)
 
     def apply_updates(self, batch) -> UpdateReport:
         """Absorb one :class:`~repro.streaming.MutationBatch` incrementally.
@@ -239,6 +322,7 @@ class GeoGraphStore:
         from ..streaming.mutation_log import DeltaGraph
 
         t0 = time.perf_counter()
+        self._resync_route_index()
         if self._delta_graph is None:
             self._delta_graph = DeltaGraph(self.g)
         dg = self._delta_graph
@@ -251,7 +335,8 @@ class GeoGraphStore:
 
         # --- remap item-indexed state to the shifted id space -------------
         self.state.delta = self._grow_item_rows(self.state.delta, old_n, nv, ne, False)
-        self.state.route = self._grow_item_rows(self.state.route, old_n, nv, ne, -1)
+        if self.route_index is None:
+            self.state.route = self._grow_item_rows(self.state.route, old_n, nv, ne, -1)
         wl = self.workload
         r2 = self._grow_item_rows(wl.r_xy, old_n, nv, ne, 0.0)
         w2 = self._grow_item_rows(wl.w_xy, old_n, nv, ne, 0.0)
@@ -269,10 +354,7 @@ class GeoGraphStore:
         for cache in self.caches.values():
             cache.g = g2
             cache.edge_mask = dg.edge_alive
-            cache.heat = np.concatenate(
-                [cache.heat[:old_n], np.zeros(nv, np.float32),
-                 cache.heat[old_n:], np.zeros(ne, np.float32)]
-            )
+            cache.heat = grow_item_rows(cache.heat, old_n, nv, ne, 0.0)
         self.g = g2
 
         # --- incremental layered-graph repair ----------------------------
@@ -285,13 +367,22 @@ class GeoGraphStore:
             e = res.new_edge_ids
             self.state.delta[g2.n_nodes + e, g2.partition[g2.src[e]]] = True
         self.state.delta[dead_items] = False
-        self.state.route[dead_items] = -1
+        if self.route_index is None:
+            self.state.route[dead_items] = -1
         r2[dead_items] = 0.0
         w2[dead_items] = 0.0
 
         # --- reroute only the rows whose replica sets changed -------------
         changed = np.unique(np.concatenate([res.new_item_ids(g2.n_nodes), dead_items]))
-        _reroute_items(self.state, self.env, changed)
+        if self.route_index is not None:
+            # the index grows its own rows (edge block shifts by nv), clears
+            # the tombstoned ones and derives exactly the changed rows
+            self.route_index.apply_batch(
+                self.state.delta, old_n, nv, ne, changed, dead_items
+            )
+            self.state.route = self.route_index.nearest
+        else:
+            _reroute_items(self.state, self.env, changed)
 
         # --- warm-start DHD over the alive topology -----------------------
         # Migration planning only *ranks* items by heat, so the store runs a
@@ -306,6 +397,14 @@ class GeoGraphStore:
             g2.n_nodes, g2.src[alive_e], g2.dst[alive_e], w_e, q,
             touched=res.touched_vertices,
         )
+
+        # --- tombstone-ratio compaction trigger ---------------------------
+        # The delta overlay grows without bound otherwise: tombstoned rows
+        # keep occupying every [I, D] array and every ELL row forever.
+        compacted = False
+        if self.tombstone_ratio() >= self.compact_ratio:
+            self._compact_in_place()
+            compacted = True
         return UpdateReport(
             n_add_vertices=nv,
             n_del_vertices=len(res.dead_vertex_ids),
@@ -315,7 +414,84 @@ class GeoGraphStore:
             repair=rstats,
             heat=hstats,
             apply_time_s=time.perf_counter() - t0,
+            compacted=compacted,
         )
+
+    def tombstone_ratio(self) -> float:
+        """Fraction of item rows that are tombstones (dead vertices+edges)."""
+        dg = self._delta_graph
+        if dg is None:
+            return 0.0
+        total = dg.g.n_items
+        alive = dg.n_alive_nodes + dg.n_alive_edges
+        return 1.0 - alive / max(total, 1)
+
+    def _compact_in_place(self) -> None:
+        """Re-key every item-indexed structure onto the dense compacted graph.
+
+        Invoked by the tombstone-ratio trigger in :meth:`apply_updates`.
+        Placement rows, the route index, workload frequencies, heat caches
+        and the warm DHD field are all row-selected/remapped in place; the
+        layered graph is rebuilt from the compact graph (compaction renumbers
+        ids, so the stable-id repair path does not apply) and a fresh
+        :class:`~repro.streaming.DeltaGraph` takes over with zero tombstones.
+        """
+        dg = self._delta_graph
+        old_n = self.g.n_nodes
+        gc, vmap, emap = dg.compact()
+        vkeep = np.where(dg.node_alive)[0]
+        ekeep = np.where(dg.edge_alive)[0]
+        # new row order: alive vertices (old order), then alive edges
+        keep = np.concatenate([vkeep, old_n + ekeep])
+
+        # placement rows + route index
+        self.state.delta = self.state.delta[keep]
+        if self.route_index is not None:
+            self.route_index.take_rows(keep)
+            self.state.route = self.route_index.nearest
+        else:
+            self.state.route = self.state.route[keep]
+
+        # workload: remap pattern items, row-select aggregated frequencies
+        imap = np.full(old_n + len(emap), -1, dtype=np.int64)
+        imap[:old_n] = vmap
+        imap[old_n:] = np.where(emap >= 0, gc.n_nodes + emap, -1)
+        pats = []
+        for p in self.workload.patterns:
+            it = imap[p.items]
+            pats.append(
+                Pattern(pid=p.pid, items=it[it >= 0], r_py=p.r_py, w_py=p.w_py, eta=p.eta)
+            )
+        self.workload = Workload(
+            patterns=pats,
+            n_items=gc.n_items,
+            n_dcs=self.workload.n_dcs,
+            r_xy=self.workload.r_xy[keep],
+            w_xy=self.workload.w_xy[keep],
+        )
+
+        # heat caches: row-select, drop the (now all-True) edge mask
+        for cache in self.caches.values():
+            cache.g = gc
+            cache.edge_mask = None
+            cache.heat = cache.heat[keep]
+
+        # layered graph: rebuild on the renumbered graph, same thresholds
+        self.lg = build_layered_graph(
+            gc, self.env, thresholds_s=self.lg.thresholds_s
+        )
+
+        # warm DHD: re-key the equilibrium field, rebuild the ELL warm
+        self.g = gc
+        from ..streaming.mutation_log import DeltaGraph
+
+        self._delta_graph = DeltaGraph(gc)
+        if self._heat is not None and self._heat.heat is not None:
+            h0 = self._heat.vertex_heat[vkeep].copy()
+            alive_e, w_e, q = self._heat_inputs()
+            self._heat.rebuild(
+                gc.n_nodes, gc.src[alive_e], gc.dst[alive_e], w_e, q, heat0=h0
+            )
 
     def flush_migrations(self, budget_bytes: Optional[float] = None, **kw):
         """Plan + apply the cost-bounded replica move-set for the heat drift
@@ -325,6 +501,7 @@ class GeoGraphStore:
         from ..streaming.delta_dhd import StreamingHeat
         from ..streaming.migration import apply_plan, plan_migrations
 
+        self._resync_route_index()
         sizes = self.g.item_size()
         if budget_bytes is None:
             budget_bytes = 0.05 * float(sizes.sum())
@@ -349,6 +526,7 @@ class GeoGraphStore:
         apply_plan(
             plan, self.state, self.env, self.workload.patterns,
             self.workload.r_xy, sizes, self.config.gamma_max_s,
+            route_index=self.route_index,
         )
         return plan
 

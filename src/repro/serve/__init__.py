@@ -1,1 +1,4 @@
 from . import engine  # noqa: F401
+from .graph_frontend import GraphFrontend, GraphRequest  # noqa: F401
+
+__all__ = ["engine", "GraphFrontend", "GraphRequest"]

@@ -1,0 +1,78 @@
+"""Request-queue frontend over ``GeoGraphStore.serve_batch`` (paper §VI).
+
+The graph-store counterpart of :mod:`repro.serve.engine`'s slot engine: online
+pattern requests arrive one at a time (per-origin client streams), are queued,
+and drain in batches through the vectorized stepwise router.  The frontend is
+deliberately thin — admission and batching policy only; all routing decisions
+live in the store.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.routing import RouteResult
+
+__all__ = ["GraphRequest", "GraphFrontend"]
+
+
+@dataclasses.dataclass
+class GraphRequest:
+    rid: int
+    items: np.ndarray
+    origin: int
+    result: Optional[RouteResult] = None
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+
+class GraphFrontend:
+    """FIFO request queue draining through ``store.serve_batch``.
+
+    ``max_batch`` bounds one drain chunk (router work stays cache-sized);
+    ``flush()`` serves everything pending and returns ``{rid: RouteResult}``.
+    """
+
+    def __init__(self, store, max_batch: int = 256) -> None:
+        self.store = store
+        self.max_batch = int(max_batch)
+        self.queue: List[GraphRequest] = []
+        self._next_rid = 0
+        self.n_served = 0
+
+    # ------------------------------------------------------------ admission
+    def submit(self, items: np.ndarray, origin: int) -> int:
+        """Enqueue one pattern request; returns its request id."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(
+            GraphRequest(rid=rid, items=np.asarray(items), origin=int(origin))
+        )
+        return rid
+
+    def submit_pattern(self, pattern, origin: int) -> int:
+        return self.submit(pattern.items, origin)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    # -------------------------------------------------------------- serving
+    def flush(self) -> Dict[int, RouteResult]:
+        """Drain the queue in FIFO batches of ``max_batch``."""
+        out: Dict[int, RouteResult] = {}
+        while self.queue:
+            chunk = self.queue[: self.max_batch]
+            del self.queue[: self.max_batch]
+            results = self.store.serve_batch(
+                [(r.items, r.origin) for r in chunk]
+            )
+            for req, res in zip(chunk, results):
+                req.result = res
+                out[req.rid] = res
+            self.n_served += len(chunk)
+        return out

@@ -42,7 +42,7 @@ class WarmStats:
     halo_size: int
     local_iters: int
     global_iters: int
-    residual: float
+    residual: float  # sup-norm step size at exit: carried-over staleness
 
 
 def _round8(k: int) -> int:
@@ -125,6 +125,10 @@ class StreamingHeat:
         self.vals: Optional[np.ndarray] = None  # [n, kmax] float32
         self.heat: Optional[np.ndarray] = None  # [n] float32
         self.q: Optional[np.ndarray] = None  # [n] float32
+        # staleness metric: sup-norm change of one more sweep from the field
+        # the last solve() exited with (0 at equilibrium, >0 when the sweep
+        # budget ran out first).  Surfaced via WarmStats / UpdateReport.
+        self.residual: float = 0.0
         # device-resident adjacency; refreshed by row scatter on warm updates
         self._cols_j: Optional[jnp.ndarray] = None
         self._vals_j: Optional[jnp.ndarray] = None
@@ -174,8 +178,13 @@ class StreamingHeat:
         dst: np.ndarray,
         weights: np.ndarray,
         q: np.ndarray,
+        heat0: Optional[np.ndarray] = None,
     ) -> int:
-        """Cold build of the symmetric ELL + full solve.  Returns iterations."""
+        """Cold build of the symmetric ELL + full solve.  Returns iterations.
+
+        ``heat0`` warm-seeds the solve from a prior field of length
+        ``n_nodes`` — the compaction re-key path, where the topology arrays
+        are renumbered but the equilibrium is (row-permuted) unchanged."""
         uu, vv, ww = _sym_halves(src, dst, weights)
         deg = np.bincount(uu, minlength=n_nodes) if len(uu) else np.zeros(n_nodes, np.int64)
         # one extra octet of headroom so streaming edge growth rarely
@@ -190,6 +199,8 @@ class StreamingHeat:
         self.q = np.zeros(n_pad, np.float32)
         self.q[:n_nodes] = np.asarray(q, np.float32)
         self.heat = self.q.copy()
+        if heat0 is not None:
+            self.heat[:n_nodes] = np.asarray(heat0, np.float32)
         self.alpha = self._effective_alpha()
         self._sync_device()
         return self.solve()
@@ -223,6 +234,9 @@ class StreamingHeat:
             tol=tol,
         )
         self.heat = np.array(h)  # np.array: jax buffers are read-only views
+        # one probe sweep prices the carried-over staleness: how far one more
+        # iteration would still move the field (0 when converged within tol)
+        self.residual = float(jnp.max(jnp.abs(self._sweep(h, cols, vals, q) - h)))
         return int(it)
 
     # ---------------------------------------------------------- warm path
@@ -254,7 +268,7 @@ class StreamingHeat:
         """
         if self.cols is None:
             it = self.rebuild(n_nodes, src, dst, weights, q)
-            return WarmStats(n_nodes, 0, 0, it, 0.0)
+            return WarmStats(n_nodes, 0, 0, it, self.residual)
         n_pad_old = self.cols.shape[0]
         if n_nodes > n_pad_old:
             n_pad = _padded(n_nodes)
@@ -275,7 +289,7 @@ class StreamingHeat:
         if not _fill_rows(self.cols, self.vals, touched, uu, vv, ww):
             # a touched row outgrew kmax — cold rebuild fallback
             it = self.rebuild(n_nodes, src, dst, weights, q)
-            return WarmStats(len(touched), 0, 0, it, 0.0)
+            return WarmStats(len(touched), 0, 0, it, self.residual)
         self.alpha = self._effective_alpha()
         self._sync_device(rows=touched)
 
@@ -349,5 +363,5 @@ class StreamingHeat:
             halo_size=0 if bmask is None else int(bmask.sum() + cmask.sum()),
             local_iters=local_done,
             global_iters=it,
-            residual=0.0,
+            residual=self.residual,
         )

@@ -28,6 +28,7 @@ import numpy as np
 
 from ..core.cost import PlacementState, check_constraints
 from ..core.latency import GeoEnvironment
+from ..core.route_index import RouteIndex
 
 __all__ = ["Move", "MigrationPlan", "plan_migrations", "apply_plan"]
 
@@ -164,7 +165,7 @@ def _reroute_items(
     state: PlacementState, env: GeoEnvironment, rows: np.ndarray
 ) -> None:
     """Partial Eq. 1 nearest-replica refresh for just ``rows``."""
-    state.route_nearest(env, sizes=None, rows=np.asarray(rows))
+    state.route_nearest(env, rows=np.asarray(rows))
 
 
 def apply_plan(
@@ -175,24 +176,40 @@ def apply_plan(
     r_xy: np.ndarray,
     sizes: np.ndarray,
     gamma_max_s: float,
+    route_index: Optional["RouteIndex"] = None,
 ) -> Dict[str, bool]:
     """Apply the plan with a constraint guard; returns the final check flags.
 
     Invariant: no constraint that held before application is violated after —
     adds only widen the replica sets, and drops are rolled back wholesale if
     the post-check regresses.
+
+    With a :class:`~repro.core.route_index.RouteIndex` the routing refresh is
+    the move-set delta patch (``apply_moves``); otherwise the touched rows are
+    re-derived with a partial ``route_nearest``.
     """
+
+    def _refresh(rows: np.ndarray, moves=None) -> None:
+        if route_index is None:
+            _reroute_items(state, env, rows)
+        elif moves is not None:
+            route_index.apply_moves(state.delta, moves)
+        else:  # rollback: replica sets changed outside the move-set shape
+            route_index.patch_rows(state.delta, rows)
+        if route_index is not None:
+            state.route = route_index.nearest
+
     before = check_constraints(patterns, state, r_xy, sizes, env, gamma_max_s)
     touched = np.unique([m.item for m in plan.moves]).astype(np.int64)
     for m in plan.moves:
         state.delta[m.item, m.dc] = m.kind == "add"
-    _reroute_items(state, env, touched)
+    _refresh(touched, moves=plan.moves)
     after = check_constraints(patterns, state, r_xy, sizes, env, gamma_max_s)
     if any(before[k] and not after[k] for k in before):
         drops = [m for m in plan.moves if m.kind == "drop"]
         for m in drops:
             state.delta[m.item, m.dc] = True
-        _reroute_items(state, env, touched)
+        _refresh(touched)
         plan.rolled_back = len(drops)
         plan.moves = [m for m in plan.moves if m.kind == "add"]
         plan.est_benefit = float(sum(m.benefit for m in plan.moves))

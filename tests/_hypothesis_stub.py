@@ -1,0 +1,101 @@
+"""Deterministic fallback for the ``hypothesis`` property-testing API.
+
+CI installs real hypothesis (``requirements.txt``); some execution sandboxes
+cannot ``pip install`` anything, and a module-level ``importorskip`` silently
+skipped every property test there — permanently.  This stub implements the
+tiny slice of the API those tests use (``given``/``settings`` +
+``strategies.integers/floats/sampled_from/booleans``) with a seeded RNG, so
+the properties still execute everywhere: deterministic samples instead of
+shrinking search, which is strictly better than not running at all.
+
+Usage in test modules::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:  # deterministic fallback, see tests/_hypothesis_stub.py
+        from _hypothesis_stub import given, settings, st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+__all__ = ["given", "settings", "st", "strategies"]
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, sampler):
+        self.sample = sampler
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
+class st:  # namespace mirror of hypothesis.strategies
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    booleans = staticmethod(booleans)
+    sampled_from = staticmethod(sampled_from)
+
+
+strategies = st
+
+
+def given(*strats, **kw_strats):
+    """Run the test body over deterministic samples of each strategy."""
+
+    def deco(fn):
+        # like hypothesis, positional strategies fill the *rightmost*
+        # parameters; the leading ones stay visible to pytest as fixtures
+        params = list(inspect.signature(fn).parameters)
+        n_fixtures = max(0, len(params) - len(strats) - len(kw_strats))
+        drawn_names = [p for p in params[n_fixtures:] if p not in kw_strats]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = np.random.default_rng(0)
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_EXAMPLES)
+            for _ in range(n):
+                # bind drawn values by NAME so fixtures passed as keywords
+                # (pytest's calling convention) never collide positionally
+                drawn = {p: s.sample(rng) for p, s in zip(drawn_names, strats)}
+                drawn.update({k: s.sample(rng) for k, s in kw_strats.items()})
+                fn(*args, **kwargs, **drawn)
+
+        wrapper.__signature__ = inspect.Signature(
+            [
+                inspect.Parameter(p, inspect.Parameter.POSITIONAL_OR_KEYWORD)
+                for p in params[:n_fixtures]
+            ]
+        )
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+    """Records ``max_examples``; every other knob is a no-op here."""
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco

@@ -1,7 +1,9 @@
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback, see tests/_hypothesis_stub.py
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.cost import (
     PlacementState,
@@ -24,7 +26,7 @@ def _mini(seed=0, n_items=10, D=3):
     st_ = PlacementState.empty(n_items, env.n_dcs)
     prim = rng.integers(0, env.n_dcs, n_items)
     st_.delta[np.arange(n_items), prim] = True
-    st_.route_nearest(env, sizes)
+    st_.route_nearest(env)
     return env, sizes, r, w, st_
 
 
@@ -47,7 +49,7 @@ def test_more_replicas_monotone(seed):
     w0 = write_cost(state, w, sizes, env)
     state2 = state.copy()
     state2.delta[:, 0] = True  # replicate everything at DC 0
-    state2.route_nearest(env, sizes)
+    state2.route_nearest(env)
     assert storage_cost(state2, sizes, env) >= s0
     assert write_cost(state2, w, sizes, env) >= w0
     assert read_cost(state2, r, sizes, env) <= r0 + 1e-12
@@ -59,7 +61,7 @@ def test_full_local_pattern_no_assoc_penalty():
     sizes = np.ones(n, np.float32)
     state = PlacementState.empty(n, env.n_dcs)
     state.delta[:, 2] = True
-    state.route_nearest(env, sizes)
+    state.route_nearest(env)
     p = Pattern(0, np.arange(n), r_py=np.eye(env.n_dcs)[2] * 5, w_py=np.zeros(env.n_dcs))
     # all items at the requesting DC -> sum(rho)=1 -> zero penalty (Eq. 5)
     assert association_penalty([p], state, sizes, env) == 0.0
@@ -71,11 +73,11 @@ def test_assoc_penalty_grows_with_spread():
     sizes = np.ones(n, np.float32)
     st1 = PlacementState.empty(n, env.n_dcs)
     st1.delta[:, 1] = True
-    st1.route_nearest(env, sizes)
+    st1.route_nearest(env)
     st2 = PlacementState.empty(n, env.n_dcs)
     for i in range(n):
         st2.delta[i, i % env.n_dcs] = True
-    st2.route_nearest(env, sizes)
+    st2.route_nearest(env)
     p = Pattern(0, np.arange(n), r_py=np.eye(env.n_dcs)[0] * 5, w_py=np.zeros(env.n_dcs))
     assert association_penalty([p], st2, sizes, env) > association_penalty(
         [p], st1, sizes, env

@@ -27,7 +27,7 @@ def test_coordinate_descent_improves():
 
     base = PlacementState.empty(wl.n_items, env.n_dcs)
     base.delta[np.arange(wl.n_items), primary] = True
-    base.route_nearest(env, sizes)
+    base.route_nearest(env)
     c_base = total_cost(wl.patterns, base, wl.r_xy, wl.w_xy, sizes, env).total
     state, c_opt = solve_coordinate_descent(wl, env, sizes, primary, max_rounds=3)
     assert c_opt <= c_base + 1e-12
@@ -41,7 +41,7 @@ def test_exact_enumeration_improves_on_baseline():
 
     base = PlacementState.empty(wl.n_items, env.n_dcs)
     base.delta[np.arange(wl.n_items), primary] = True
-    base.route_nearest(env, sizes)
+    base.route_nearest(env)
     c_base = total_cost(wl.patterns, base, wl.r_xy, wl.w_xy, sizes, env).total
     state, c_star = solve_exact_tiny(wl, env, sizes, primary, max_enum_items=4)
     # the do-nothing assignment is in the enumeration -> never worse

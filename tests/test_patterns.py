@@ -1,8 +1,10 @@
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback, see tests/_hypothesis_stub.py
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.graph import build_csr
 from repro.core.patterns import (

@@ -37,7 +37,7 @@ def test_placement_reduces_cost_vs_primary_only(small_setup):
     base = PlacementState.empty(g.n_items, env.n_dcs)
     base.delta[np.arange(g.n_nodes), g.partition] = True
     base.delta[g.n_nodes + np.arange(g.n_edges), g.partition[g.src]] = True
-    base.route_nearest(env, g.item_size())
+    base.route_nearest(env)
     sizes = g.item_size()
     c_placed = total_cost(pats, state, wl.r_xy, wl.w_xy, sizes, env).total
     c_base = total_cost(pats, base, wl.r_xy, wl.w_xy, sizes, env).total
@@ -70,4 +70,4 @@ def test_eviction_cools_unused(small_setup, small_store):
     assert len(evicted) >= 0
     assert not store.state.delta[evicted, 0].any()
     # refresh routes (Alg. 3 line 10) — the session store is shared
-    store.state.route_nearest(env, g.item_size())
+    store.state.route_nearest(env)

@@ -1,0 +1,224 @@
+"""RouteIndex: incremental nearest/second-nearest replica index.
+
+The load-bearing invariant: after ANY sequence of store mutations
+(``apply_updates``, ``flush_migrations``, ``maintain`` evictions, compaction)
+the incremental index equals a from-scratch ``route_nearest`` rebuild
+row-for-row — the differential acceptance criterion of the serving PR.
+"""
+import numpy as np
+import pytest
+
+from repro.core.cost import PlacementState
+from repro.core.graph import Graph, build_csr
+from repro.core.latency import make_paper_env, make_synthetic_env
+from repro.core.patterns import Workload, generate_khop_patterns
+from repro.core.placement import PlacementConfig
+from repro.core.route_index import RouteIndex
+from repro.core.store import GeoGraphStore
+from repro.streaming import DeltaGraph, MutationLog, random_churn_batch
+
+
+def _random_graph(n, m, n_dcs, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    return Graph.from_edges(
+        n, src[keep], dst[keep], partition=rng.integers(0, n_dcs, n)
+    ), rng
+
+
+def _make_store(seed=0, n=250, m=1200, n_patterns=25, **kw):
+    g, rng = _random_graph(n, m, 5, seed)
+    env = make_paper_env()
+    csr = build_csr(g.n_nodes, g.src, g.dst, symmetrize=True)
+    pats = generate_khop_patterns(g, csr, n_patterns, seed=seed + 1, n_dcs=env.n_dcs)
+    wl = Workload.from_patterns(pats, g.n_items, env.n_dcs)
+    store = GeoGraphStore(
+        g, env, wl, config=PlacementConfig(precache=False, dhd_steps=4), **kw
+    )
+    return store, rng
+
+
+def _assert_index_matches_rebuild(store):
+    """Row-for-row equality with a from-scratch route_nearest derivation."""
+    ref = PlacementState(store.state.delta.copy(), store.state.route.copy())
+    ref.route_nearest(store.env)
+    assert np.array_equal(store.route_index.nearest, ref.route)
+    assert store.route_index.verify(store.state.delta)
+
+
+# ------------------------------------------------------------ primitives
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_fuzz_add_drop_moves_match_rebuild(seed):
+    """Randomized add/drop/move-set patches == full rebuild, every step."""
+    rng = np.random.default_rng(seed)
+    env = make_synthetic_env(6, "high", seed=seed) if seed % 2 else make_paper_env()
+    D, I = env.n_dcs, 80
+    delta = rng.random((I, D)) < 0.4
+    idx = RouteIndex.build(delta, env)
+    assert idx.verify(delta)
+
+    class _Move:
+        def __init__(self, item, dc, kind):
+            self.item, self.dc, self.kind = item, dc, kind
+
+    for step in range(50):
+        op = rng.integers(0, 3)
+        dc = int(rng.integers(0, D))
+        items = rng.choice(I, size=rng.integers(1, 12), replace=False)
+        if op == 0:
+            delta[items, dc] = True
+            idx.add_replicas(delta, items, dc)
+        elif op == 1:
+            delta[items, dc] = False
+            idx.drop_replicas(delta, items, dc)
+        else:
+            moves = []
+            for x in items:
+                kind = "add" if rng.random() < 0.5 else "drop"
+                delta[int(x), dc] = kind == "add"
+                moves.append(_Move(int(x), dc, kind))
+            idx.apply_moves(delta, moves)
+        assert idx.verify(delta), f"diverged at step {step} (op {op})"
+    # the incremental paths actually ran (not everything fell back to patch)
+    assert idx.stats.rows_shifted > 0
+    assert idx.stats.rows_promoted > 0
+
+
+def test_second_nearest_semantics():
+    env = make_paper_env()
+    delta = np.zeros((3, env.n_dcs), dtype=bool)
+    delta[0, [1, 3]] = True  # two replicas
+    delta[1, 2] = True  # single replica
+    idx = RouteIndex.build(delta, env)
+    # single replica: nearest everywhere, no second
+    assert (idx.nearest[1] == 2).all()
+    assert (idx.second[1] == -1).all()
+    # no replica: unroutable
+    assert (idx.nearest[2] == -1).all()
+    # two replicas: {nearest, second} == {1, 3} for every origin
+    for y in range(env.n_dcs):
+        assert {int(idx.nearest[0, y]), int(idx.second[0, y])} == {1, 3}
+    # dropping one of the two replicas leaves a single-replica row
+    dc = int(idx.nearest[0, 0])
+    delta[0, dc] = False
+    idx.drop_replicas(delta, np.array([0]), dc)
+    assert idx.verify(delta)
+    assert (idx.second[0] == -1).all()
+
+
+# ---------------------------------------------------- store differential
+def test_differential_updates_and_migrations():
+    """Randomized apply_updates + flush_migrations sequence: incremental
+    RouteIndex == from-scratch route_nearest rebuild, row-for-row."""
+    store, rng = _make_store(seed=11)
+    assert store.route_index is not None
+    assert store.state.route is store.route_index.nearest
+    _assert_index_matches_rebuild(store)
+    store._delta_graph = DeltaGraph(store.g)
+    for i in range(4):
+        store.apply_updates(random_churn_batch(store._delta_graph, 0.03, rng))
+        assert store.state.route is store.route_index.nearest
+        _assert_index_matches_rebuild(store)
+        if i % 2:
+            store.flush_migrations()
+            _assert_index_matches_rebuild(store)
+    store.maintain()
+    _assert_index_matches_rebuild(store)
+
+
+def test_external_route_nearest_resync():
+    """A direct full route_nearest() replaces state.route and orphans the
+    index alias; the next store entry point must re-adopt the table (the
+    staleness bug behind evictions patching a detached array)."""
+    store, _ = _make_store(seed=9)
+    store.state.route_nearest(store.env)
+    assert store.state.route is not store.route_index.nearest
+    store.maintain(evict=True)
+    assert store.state.route is store.route_index.nearest
+    _assert_index_matches_rebuild(store)
+    assert store.constraints()["a_route_on_replica"]
+    # delete_items after a second orphaning must also resync (it clears
+    # index rows, which would otherwise never reach the detached table)
+    store.state.route_nearest(store.env)
+    victim = store.workload.patterns[0].items[:3]
+    store.delete_items(victim)
+    assert store.state.route is store.route_index.nearest
+    assert (store.state.route[victim] == -1).all()
+    _assert_index_matches_rebuild(store)
+
+
+def test_maintain_eviction_patches_index():
+    store, _ = _make_store(seed=3)
+    # heat is cold everywhere -> eviction drops every non-primary replica
+    out = store.maintain(evict=True)
+    assert out["evicted"] > 0
+    _assert_index_matches_rebuild(store)
+
+
+# ------------------------------------------------------------ compaction
+def test_compaction_across_delete_serve_boundary():
+    """Interleaved deletes + serves across the tombstone-ratio compaction:
+    every pattern stays servable, placement/routing invariants hold, and the
+    store actually shrinks its id space."""
+    store, rng = _make_store(seed=7, compact_ratio=0.25)
+    store._delta_graph = DeltaGraph(store.g)
+    n_items_before = store.g.n_items
+    compacted = False
+    for i in range(12):
+        alive_v = np.where(store._delta_graph.node_alive)[0]
+        log = MutationLog(store.g.n_nodes)
+        for vid in rng.choice(alive_v, size=12, replace=False):
+            log.delete_vertex(int(vid))
+        rep = store.apply_updates(log.seal())
+        compacted = compacted or rep.compacted
+        reqs = [
+            (p.items, int(np.argmax(p.r_py)))
+            for p in store.workload.patterns
+            if len(p.items)
+        ]
+        results = store.serve_batch(reqs)
+        assert sum(r.n_missing for r in results) == 0
+        _assert_index_matches_rebuild(store)
+        ok = store.constraints()
+        assert ok["a_route_on_replica"] and ok["b_pattern_route_on_replica"]
+        if compacted:
+            break
+    assert compacted, "tombstone-ratio trigger never fired"
+    assert store.tombstone_ratio() == 0.0
+    assert store.g.n_items < n_items_before
+    # post-compaction churn keeps working on the re-keyed state
+    for _ in range(2):
+        store.apply_updates(random_churn_batch(store._delta_graph, 0.03, rng))
+        _assert_index_matches_rebuild(store)
+    reqs = [
+        (p.items, int(np.argmax(p.r_py)))
+        for p in store.workload.patterns
+        if len(p.items)
+    ]
+    assert sum(r.n_missing for r in store.serve_batch(reqs)) == 0
+
+
+# ------------------------------------------------------- warm-DHD residual
+def test_heat_residual_surfaced_and_decays():
+    """A starved warm solve reports a positive carried-over residual in
+    UpdateReport; repeated maintain() works it off to ~0."""
+    from repro.streaming import StreamingHeat
+
+    store, rng = _make_store(seed=5)
+    store._delta_graph = DeltaGraph(store.g)
+    # starve the per-batch sweep budget so residual is visibly carried
+    store._heat = StreamingHeat(tol=1e-7, max_iters=1)
+    rep = store.apply_updates(random_churn_batch(store._delta_graph, 0.05, rng))
+    assert rep.heat_residual == rep.heat.residual
+    assert rep.heat_residual > 1e-6
+    residuals = [rep.heat_residual]
+    store._heat.max_iters = 16  # each maintenance window pays down 16 sweeps
+    for _ in range(40):
+        out = store.maintain(evict=False)
+        residuals.append(out["heat_residual"])
+        if residuals[-1] < 1e-6:
+            break
+    assert residuals[-1] < 1e-6, f"residual never decayed: {residuals}"
+    assert residuals[-1] < residuals[0]

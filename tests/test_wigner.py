@@ -2,8 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback, see tests/_hypothesis_stub.py
+    from _hypothesis_stub import given, settings, st
 
 from repro.models.gnn.wigner import (
     dir_to_angles,
