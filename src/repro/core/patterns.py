@@ -209,27 +209,25 @@ def region_adjacency(
     vertices (or the edge item itself vs its endpoints) fall in different
     regions; the weight counts such connections.  Returns (src, dst, w).
     """
+    n_regions = len(regions)
     item_region = np.full(g.n_items, -1, dtype=np.int64)
     for r in regions:
         item_region[r.items] = r.rid
-    pair_w: Dict[Tuple[int, int], float] = {}
-
-    def bump(a: int, b: int) -> None:
-        if a < 0 or b < 0 or a == b:
-            return
-        k = (min(a, b), max(a, b))
-        pair_w[k] = pair_w.get(k, 0.0) + 1.0
-
     er = item_region[g.n_nodes + np.arange(g.n_edges)]
     sr = item_region[g.src]
     dr = item_region[g.dst]
+    # canonical (min, max) pair keys over the three incidence kinds, counted
+    # with one vectorized np.unique pass (this runs once per decomposition
+    # pool — the per-edge Python-dict version was a placement hot spot)
+    keys = []
     for a, b in ((sr, dr), (sr, er), (er, dr)):
-        for i in range(g.n_edges):
-            bump(int(a[i]), int(b[i]))
-    if not pair_w:
+        valid = (a >= 0) & (b >= 0) & (a != b)
+        lo = np.minimum(a[valid], b[valid])
+        hi = np.maximum(a[valid], b[valid])
+        keys.append(lo * n_regions + hi)
+    flat = np.concatenate(keys) if keys else np.zeros(0, dtype=np.int64)
+    if len(flat) == 0:
         z = np.zeros(0, dtype=np.int64)
         return z, z, np.zeros(0, dtype=np.float32)
-    src = np.array([k[0] for k in pair_w], dtype=np.int64)
-    dst = np.array([k[1] for k in pair_w], dtype=np.int64)
-    w = np.array(list(pair_w.values()), dtype=np.float32)
-    return src, dst, w
+    uniq, counts = np.unique(flat, return_counts=True)
+    return uniq // n_regions, uniq % n_regions, counts.astype(np.float32)

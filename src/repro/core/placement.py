@@ -25,6 +25,7 @@ Flow (level-synchronous rendering of Algorithms 1+2):
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -46,9 +47,12 @@ __all__ = [
     "PlacedUnit",
     "PlacementConfig",
     "replication_gain",
+    "CompetitionArena",
+    "PlacementJournal",
     "overlap_centric_placement",
     "precache_hot_regions",
     "HeatCache",
+    "step_heat_caches",
 ]
 
 
@@ -76,6 +80,10 @@ class PlacementConfig:
     lambda2: float = 0.5
     dhd: dhd.DHDParams = dataclasses.field(default_factory=dhd.DHDParams)
     dhd_steps: int = 32
+    # one batched diffusion per pool (CompetitionArena) instead of one
+    # diffusion per (candidate, region); winner-identical to the sequential
+    # path (differentially tested), False keeps the per-call reference
+    dhd_batch: bool = True
     precache: bool = True
     theta_quantile: float = 0.55  # paper Fig. 12: 50-60% is near-optimal
     precache_max_per_dc: int = 4096
@@ -100,30 +108,33 @@ def replication_gain(
     tracks the real cost model's geometry (cluster-local, Appendix D).
     """
     items = unit.items
-    size_sum = float(sizes[items].sum())
+    item_sizes = sizes[items]
+    size_sum = float(item_sizes.sum())
     n_items = len(items)
-    holder_set = set(int(d) for d in holder_dcs)
+    holder = np.unique(np.asarray(holder_dcs, dtype=np.int64))
+    w_total = float(unit.w_py.sum())
+    primary_items = primary[items] if primary is not None else None
     gain = 0.0
     for child in children_dcs:
-        child_list = [int(d) for d in child]
-        r_c = float(unit.r_py[child].sum())
+        child_arr = np.asarray(child, dtype=np.int64)
+        r_c = float(unit.r_py[child_arr].sum())
         if r_c <= 0:
             continue
         # reads of items whose primary already sits in the child region are
         # local without a replica — only *remote* bytes produce savings
         # (without this the surrogate over-replicates write-heavy patterns;
         # measured: Fig. 9 optimality gap 20.7% -> see bench_output)
-        if primary is not None:
-            remote = ~np.isin(primary[items], child)
-            size_remote = float(sizes[items[remote]].sum())
+        if primary_items is not None:
+            size_remote = float(item_sizes[~np.isin(primary_items, child_arr)].sum())
         else:
             size_remote = size_sum
-        w_total = float(unit.w_py.sum())
-        outside = [d for d in holder_set if d not in child_list] or list(holder_set)
+        outside = holder[~np.isin(holder, child_arr)]
+        if len(outside) == 0:
+            outside = holder
         # mean $/byte of the cross-cluster paths this replication removes
-        net_mean = float(np.mean([[env.c_net[o, c] for o in outside] for c in child_list]))
-        store_mean = float(np.mean([env.c_store[c] for c in child_list]))
-        put_mean = float(np.mean([env.c_write[c] for c in child_list]))
+        net_mean = float(env.c_net[np.ix_(outside, child_arr)].mean())
+        store_mean = float(env.c_store[child_arr].mean())
+        put_mean = float(env.c_write[child_arr].mean())
         read_save = r_c * size_remote * net_mean
         assoc_save = lambda1 * r_c * n_items * 1e-6  # assoc unit ~ per-M GETs
         store_add = size_sum * store_mean
@@ -201,13 +212,185 @@ def _dhd_competition(
     return int(np.asarray(freq).argmax())
 
 
+# --------------------------------------------------- batched DHD competition
+class CompetitionArena:
+    """Per-pool batched DHD competition (one diffusion for every candidate).
+
+    A candidate's diffused heat field depends only on the region graph, its
+    own super-node edges and the (shared) seed — *not* on which region is
+    being contested.  So a pool with R regions and C candidates needs C
+    diffusions, not R x C: the arena hoists ``region_adjacency`` once, builds
+    every candidate's super-node edge weights with ``np.add.at`` over a
+    shared edge-list union (weight 0 = edge absent for that candidate, see
+    the weight gate in :func:`repro.core.dhd.dhd_step_edges`), and runs ONE
+    batched diffusion producing a ``[C, R+1]`` heat table.  Per-region
+    winners read from the table with exactly the scoring/fallback rules of
+    :func:`_dhd_competition`.
+    """
+
+    def __init__(
+        self,
+        regions: Sequence[OverlapRegion],
+        g: Graph,
+        candidates: List[Tuple[int, np.ndarray, List[np.ndarray]]],
+        params: dhd.DHDParams,
+        n_steps: int,
+        heat_valid: Optional[Tuple[Optional[np.ndarray], np.ndarray]] = None,
+    ) -> None:
+        self.candidates = candidates
+        self.n_regions = len(regions)
+        if heat_valid is None:
+            heat_valid = self._build(regions, g, candidates, params, n_steps)
+        self.heat, self.valid = heat_valid
+
+    @staticmethod
+    def _build(
+        regions: Sequence[OverlapRegion],
+        g: Graph,
+        candidates: List[Tuple[int, np.ndarray, List[np.ndarray]]],
+        params: dhd.DHDParams,
+        n_steps: int,
+    ) -> Tuple[Optional[np.ndarray], np.ndarray]:
+        n_regions = len(regions)
+        n_cand = len(candidates)
+        valid = np.zeros(n_cand, dtype=bool)
+        rsrc, rdst, rw = region_adjacency(regions, g)
+        if len(rsrc) == 0:  # heat cannot reach anything -> frequency fallback
+            return None, valid
+        item_region = np.full(g.n_items, -1, dtype=np.int64)
+        for r in regions:
+            item_region[r.items] = r.rid
+        src_reg = item_region[g.src]
+        dst_reg = item_region[g.dst]
+        # super-node edge weights per candidate: graph-edge counts between
+        # the candidate's holdings and each region (Fig. 4b), segment-summed
+        cnt = np.zeros((n_cand, n_regions), dtype=np.float32)
+        held_mask = np.zeros(g.n_items, dtype=bool)
+        for ci, (_, _, held_items) in enumerate(candidates):
+            if not held_items:
+                continue
+            held = np.concatenate(held_items)
+            if len(held) == 0:
+                continue
+            held_mask[:] = False
+            held_mask[held] = True
+            touch_src = held_mask[g.src] & (dst_reg >= 0)
+            touch_dst = held_mask[g.dst] & (src_reg >= 0)
+            np.add.at(cnt[ci], dst_reg[touch_src], 1.0)
+            np.add.at(cnt[ci], src_reg[touch_dst], 1.0)
+            valid[ci] = bool(cnt[ci].any())
+        if not valid.any():
+            return None, valid
+        # shared edge-list union: region edges + every super edge any
+        # candidate uses; per-candidate weights switch its own super edges on
+        touched = np.where(cnt.any(axis=0))[0]
+        usrc = np.concatenate([rsrc, np.full(len(touched), n_regions, dtype=np.int64)])
+        udst = np.concatenate([rdst, touched])
+        weights = np.empty((n_cand, len(usrc)), dtype=np.float32)
+        weights[:, : len(rw)] = rw[None, :]
+        weights[:, len(rw):] = cnt[:, touched]
+        seeds = np.zeros((n_cand, n_regions + 1), dtype=np.float32)
+        seeds[:, n_regions] = 1.0
+        heat = dhd.diffuse_affinity_batch(
+            n_regions + 1, usrc, udst, weights, seeds,
+            params=params, n_steps=n_steps,
+        )
+        return heat, valid
+
+    def winner(self, rid: int, req: Sequence[int], unit_r: np.ndarray) -> int:
+        """Winning position within ``req`` (candidate indices contesting
+        region ``rid``) — same scoring and frequency fallback as
+        :func:`_dhd_competition` over the same candidate order."""
+        if self.heat is not None:
+            scores = np.asarray(
+                [self.heat[i, rid] if self.valid[i] else -1.0 for i in req]
+            )
+            if scores.max() > 0:
+                return int(scores.argmax())
+        freq = [float(unit_r[self.candidates[i][1]].sum()) for i in req]
+        return int(np.asarray(freq).argmax())
+
+
+# ------------------------------------------------------- placement journal
+def _digest(*arrays: np.ndarray) -> bytes:
+    h = hashlib.blake2b(digest_size=16)
+    for a in arrays:
+        b = np.ascontiguousarray(a)
+        h.update(str(b.dtype).encode())
+        h.update(str(b.shape).encode())
+        h.update(b.tobytes())
+    return h.digest()
+
+
+def _unit_fp(u: PlacedUnit) -> Tuple:
+    return (u.key, float(u.eta), _digest(u.items, u.r_py, u.w_py))
+
+
+def _cand_fp(cand: List[Tuple[int, np.ndarray, List[np.ndarray]]]) -> Tuple:
+    return tuple(
+        (cid, _digest(dcs), tuple(_digest(h) for h in held))
+        for (cid, dcs, held) in cand
+    )
+
+
+class PlacementJournal:
+    """Memo of placement intermediates keyed on their *exact* inputs.
+
+    Algorithms 1+2 are deterministic, so any intermediate whose inputs are
+    unchanged between two runs can be replayed from the journal instead of
+    recomputed.  :meth:`GeoGraphStore.insert_patterns_incremental` exploits
+    this: re-running placement over the extended workload only pays for the
+    pools the new patterns actually touch (decomposition, region adjacency
+    and the batched DHD heat table are all journal hits elsewhere), which is
+    what makes the result provably identical to a full re-place.
+
+    Keys fingerprint unit items/frequencies and candidate holdings with
+    BLAKE2 digests; the journal must be discarded whenever the underlying
+    graph or environment changes (mutation batches, compaction).  Each memo
+    table is FIFO-bounded (``max_entries``) so repeated incremental inserts
+    — which retire old fingerprints every round — cannot grow it without
+    bound; evicted entries simply recompute on next use.
+    """
+
+    def __init__(self, max_entries: int = 4096) -> None:
+        self.max_entries = max_entries
+        self.regions: Dict[Tuple, List[OverlapRegion]] = {}
+        self.heat: Dict[Tuple, Tuple[Optional[np.ndarray], np.ndarray]] = {}
+        self.gain: Dict[Tuple, float] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def stats(self) -> Dict[str, int]:
+        return dict(hits=self.hits, misses=self.misses,
+                    pools=len(self.regions), heats=len(self.heat))
+
+    def memo(self, cache: Dict, key: Tuple, compute):
+        hit = cache.get(key)
+        if hit is not None:
+            self.hits += 1
+            return hit
+        self.misses += 1
+        out = compute()
+        cache[key] = out
+        while len(cache) > self.max_entries:  # FIFO: dicts keep insert order
+            cache.pop(next(iter(cache)))
+        return out
+
+
 # ------------------------------------------------------- main placement flow
 def overlap_centric_placement(
     lg: LayeredGraph,
     workload: Workload,
     config: Optional[PlacementConfig] = None,
+    journal: Optional[PlacementJournal] = None,
+    route: bool = True,
 ) -> Tuple[PlacementState, Dict[str, object]]:
-    """Algorithms 1 + 2 end-to-end.  Returns (placement state, stats)."""
+    """Algorithms 1 + 2 end-to-end.  Returns (placement state, stats).
+
+    ``journal`` memoizes pool decompositions, replication gains and DHD heat
+    tables across runs (see :class:`PlacementJournal`); ``route=False`` skips
+    the final nearest-replica table derivation for callers that patch an
+    existing :class:`~repro.core.route_index.RouteIndex` instead."""
     cfg = config or PlacementConfig()
     g, env = lg.g, lg.env
     sizes = g.item_size()
@@ -264,9 +447,18 @@ def overlap_centric_placement(
                     to_layer = k - 1
                 if not child_ids:
                     continue
-                gain = replication_gain(
-                    unit, b.dcs, child_dcs, sizes, env, cfg.lambda1, primary
-                )
+                if journal is not None:
+                    gkey = (_unit_fp(unit), bs_id, tuple(child_ids), to_layer)
+                    gain = journal.memo(
+                        journal.gain, gkey,
+                        lambda: replication_gain(
+                            unit, b.dcs, child_dcs, sizes, env, cfg.lambda1, primary
+                        ),
+                    )
+                else:
+                    gain = replication_gain(
+                        unit, b.dcs, child_dcs, sizes, env, cfg.lambda1, primary
+                    )
                 if gain >= 0:
                     stats["replicated"] += 1
                     for cid in child_ids:
@@ -279,11 +471,20 @@ def overlap_centric_placement(
         # Phase 2: overlap-region allocation within each cluster
         for comp, entries in list(pools[k].items()):
             units = [u for (_, u) in entries]
-            pseudo = [
-                Pattern(pid=i, items=u.items, r_py=u.r_py, w_py=u.w_py, eta=u.eta)
-                for i, u in enumerate(units)
-            ]
-            regions = decompose_overlap_regions(pseudo, g.n_items)
+            pool_fp = (
+                (k, comp, tuple((bs, _unit_fp(u)) for (bs, u) in entries))
+                if journal is not None else None
+            )
+            def _decompose():
+                pseudo = [
+                    Pattern(pid=i, items=u.items, r_py=u.r_py, w_py=u.w_py, eta=u.eta)
+                    for i, u in enumerate(units)
+                ]
+                return decompose_overlap_regions(pseudo, g.n_items)
+            if journal is not None:
+                regions = journal.memo(journal.regions, pool_fp, _decompose)
+            else:
+                regions = _decompose()
             stats["regions"] += len(regions)
             b_holder = next(bb for bb in lg.layers[k] if bb.comp == comp)
             children = lg.bs_children(b_holder)
@@ -299,6 +500,29 @@ def overlap_centric_placement(
                     for c in children
                 ]
                 to_layer = k - 1
+            # one batched diffusion covers every competition in this pool;
+            # built lazily so pools that fully replicate never pay for it
+            arena: Optional[CompetitionArena] = None
+
+            def _get_arena() -> CompetitionArena:
+                nonlocal arena
+                if arena is None:
+                    if journal is not None:
+                        hv = journal.memo(
+                            journal.heat, (pool_fp, _cand_fp(cand)),
+                            lambda: CompetitionArena._build(
+                                regions, g, cand, cfg.dhd, cfg.dhd_steps
+                            ),
+                        )
+                        arena = CompetitionArena(
+                            regions, g, cand, cfg.dhd, cfg.dhd_steps, heat_valid=hv
+                        )
+                    else:
+                        arena = CompetitionArena(
+                            regions, g, cand, cfg.dhd, cfg.dhd_steps
+                        )
+                return arena
+
             for region in regions:
                 pids = region.key
                 r_py = np.sum([units[i].r_py for i in pids], axis=0)
@@ -308,24 +532,41 @@ def overlap_centric_placement(
                     eta=min(units[i].eta for i in pids),
                     key=tuple(sorted(set(sum((units[i].key for i in pids), ())))),
                 )
-                req = [
-                    (cid, dcs, held) for (cid, dcs, held) in cand
+                req_idx = [
+                    i for i, (cid, dcs, held) in enumerate(cand)
                     if r_py[dcs].sum() > 0
                 ]
-                if not req:
+                if not req_idx:
                     continue
-                gain = replication_gain(
-                    runit, b_holder.dcs, [d for (_, d, _) in req], sizes, env,
-                    cfg.lambda1, primary,
-                )
+                req = [cand[i] for i in req_idx]
+                if journal is not None:
+                    gkey = (
+                        _unit_fp(runit), b_holder.bs_id,
+                        tuple(cand[i][0] for i in req_idx), to_layer,
+                    )
+                    gain = journal.memo(
+                        journal.gain, gkey,
+                        lambda: replication_gain(
+                            runit, b_holder.dcs, [d for (_, d, _) in req],
+                            sizes, env, cfg.lambda1, primary,
+                        ),
+                    )
+                else:
+                    gain = replication_gain(
+                        runit, b_holder.dcs, [d for (_, d, _) in req], sizes, env,
+                        cfg.lambda1, primary,
+                    )
                 if gain > 0:
                     stats["replicated"] += 1
                     targets = [cid for (cid, _, _) in req]
                 else:
                     stats["competitions"] += 1
-                    win = _dhd_competition(
-                        region, req, regions, g, cfg.dhd, cfg.dhd_steps, r_py
-                    )
+                    if cfg.dhd_batch:
+                        win = _get_arena().winner(region.rid, req_idx, r_py)
+                    else:
+                        win = _dhd_competition(
+                            region, req, regions, g, cfg.dhd, cfg.dhd_steps, r_py
+                        )
                     targets = [req[win][0]]
                 for cid in targets:
                     holdings[to_layer].setdefault(cid, []).append(runit)
@@ -343,7 +584,10 @@ def overlap_centric_placement(
             max_per_dc=cfg.precache_max_per_dc,
         )
 
-    state.route_nearest(env)
+    if journal is not None:
+        stats["journal"] = journal.stats()
+    if route:
+        state.route_nearest(env)
     return state, stats
 
 
@@ -370,9 +614,10 @@ def precache_hot_regions(
     q0 = np.where(sources, 1.0 / max(sources.sum(), 1), 0.0).astype(np.float32)
     w_e = workload.r_xy[g.n_nodes :].sum(axis=1).astype(np.float32)
     w_e = w_e / max(w_e.max(), 1.0) + 1e-3
-    heat = dhd.diffuse_affinity(
-        g.n_nodes, g.src, g.dst, w_e, q0, base_heat=heat0, params=params, n_steps=n_steps
-    )
+    heat = dhd.diffuse_affinity_batch(
+        g.n_nodes, g.src, g.dst, w_e, q0[None, :], base_heat=heat0,
+        params=params, n_steps=n_steps,
+    )[0]
     theta_star = float(np.quantile(heat, theta_quantile))
     hot = np.where(heat >= theta_star)[0]
     if len(hot) > max_per_dc:
@@ -421,22 +666,7 @@ class HeatCache:
 
     def step(self, n_steps: int = 4) -> None:
         """Diffuse heat over the cache topology (vertex items only)."""
-        n = self.g.n_nodes
-        if self.edge_mask is not None:
-            src, dst = self.g.src[self.edge_mask], self.g.dst[self.edge_mask]
-        else:
-            src, dst = self.g.src, self.g.dst
-        h = dhd.diffuse_affinity(
-            n,
-            src,
-            dst,
-            np.ones(len(src), dtype=np.float32),
-            self.heat[:n],
-            params=self.params,
-            n_steps=n_steps,
-        )
-        self.heat[:n] = h
-        self.heat[n:] *= (1.0 - self.params.gamma) ** n_steps
+        step_heat_caches([self], n_steps=n_steps)
 
     def evict(self) -> np.ndarray:
         """Remove cold replicas; returns evicted item ids (Alg. 3 lines 7-10).
@@ -447,3 +677,39 @@ class HeatCache:
         ids = np.where(cold)[0]
         self.state.delta[ids, self.dc] = False
         return ids
+
+
+def step_heat_caches(caches: Sequence[HeatCache], n_steps: int = 4) -> None:
+    """Diffuse every cache's heat field in ONE batched DHD run.
+
+    All per-DC caches of a store share the same graph, edge mask and params,
+    so their Alg. 3 diffusions differ only in the seed heat — a ``[D, n]``
+    batch through :func:`repro.core.dhd.diffuse_affinity_batch`.  Caches
+    with differing topology fall back to individual runs.  Row ``d`` equals
+    what ``caches[d].step(n_steps)`` alone would produce."""
+    if not caches:
+        return
+    lead = caches[0]
+    shared = all(
+        c.g is lead.g and c.edge_mask is lead.edge_mask and c.params == lead.params
+        for c in caches[1:]
+    )
+    if not shared:
+        for c in caches:
+            step_heat_caches([c], n_steps=n_steps)
+        return
+    g = lead.g
+    if lead.edge_mask is not None:
+        src, dst = g.src[lead.edge_mask], g.dst[lead.edge_mask]
+    else:
+        src, dst = g.src, g.dst
+    n = g.n_nodes
+    seeds = np.stack([c.heat[:n] for c in caches])
+    h = dhd.diffuse_affinity_batch(
+        n, src, dst, np.ones(len(src), dtype=np.float32), seeds,
+        params=lead.params, n_steps=n_steps,
+    )
+    decay = (1.0 - lead.params.gamma) ** n_steps
+    for c, row in zip(caches, h):
+        c.heat[:n] = row
+        c.heat[n:] *= decay

@@ -19,7 +19,13 @@ from .graph import Graph, build_csr, grow_item_rows
 from .latency import GeoEnvironment
 from .layered_graph import LayeredGraph, build_layered_graph, repair_layered_graph
 from .patterns import Pattern, Workload
-from .placement import HeatCache, PlacementConfig, overlap_centric_placement
+from .placement import (
+    HeatCache,
+    PlacementConfig,
+    PlacementJournal,
+    overlap_centric_placement,
+    step_heat_caches,
+)
 from .route_index import RouteIndex
 from .routing import (
     OfflineLayout,
@@ -90,6 +96,10 @@ class GeoGraphStore:
         self.routing_name = routing
         self.compact_ratio = compact_ratio
         self.route_index: Optional[RouteIndex] = None
+        # memo of placement intermediates; populated by every geolayer
+        # placement run, replayed by insert_patterns_incremental, discarded
+        # whenever the item id space changes (mutations / compaction)
+        self._placement_journal = PlacementJournal()
         t0 = time.perf_counter()
         self.lg: LayeredGraph = build_layered_graph(
             g, env, latency_interval_s=latency_interval_s
@@ -112,9 +122,12 @@ class GeoGraphStore:
         self._heat_scale = None
 
     # ------------------------------------------------------------ strategies
-    def _place(self, name: str, seed: int) -> Tuple[PlacementState, Dict]:
+    def _place(self, name: str, seed: int, route: bool = True) -> Tuple[PlacementState, Dict]:
         if name == "geolayer":
-            return overlap_centric_placement(self.lg, self.workload, self.config)
+            return overlap_centric_placement(
+                self.lg, self.workload, self.config,
+                journal=self._placement_journal, route=route,
+            )
         if name == "random":
             return (
                 baselines.place_random_k(self.g, self.workload, self.env, seed=seed),
@@ -238,8 +251,9 @@ class GeoGraphStore:
         whole table."""
         self._resync_route_index()
         evicted = 0
+        # all per-DC caches share one topology -> ONE batched diffusion
+        step_heat_caches(list(self.caches.values()), n_steps=diffusion_steps)
         for dc, cache in self.caches.items():
-            cache.step(n_steps=diffusion_steps)
             if evict:
                 ids = cache.evict()
                 evicted += len(ids)
@@ -266,16 +280,76 @@ class GeoGraphStore:
             self.state.route[ids] = -1
 
     def insert_patterns(self, new_patterns: Sequence[Pattern]) -> None:
-        """Incremental update: materialize new access patterns and re-run
-        placement for them (periodic refresh path of §V)."""
+        """Full refresh: materialize new access patterns and re-run placement
+        and routing from scratch (periodic refresh path of §V).
+
+        The journal is reset first so this really is a cold re-place (and is
+        freshly populated for later incremental inserts).  Heat caches are
+        re-pointed at the new :class:`PlacementState`."""
         self.workload = Workload.from_patterns(
             list(self.workload.patterns) + list(new_patterns),
             self.workload.n_items,
             self.workload.n_dcs,
         )
+        self._placement_journal = PlacementJournal()
         self.state, pstats = self._place(self.placement_name, seed=0)
         self._apply_routing(self.routing_name, seed=0)
+        for cache in self.caches.values():
+            cache.state = self.state
         self.stats.placement_stats = pstats
+
+    def insert_patterns_incremental(
+        self, new_patterns: Sequence[Pattern]
+    ) -> Dict[str, object]:
+        """Absorb new access patterns without the full re-place.
+
+        Replays Algorithms 1+2 over the extended workload *through the
+        placement journal*: pools the new patterns never touch are journal
+        hits (their decomposition, region adjacency and batched DHD heat
+        tables are replayed, not recomputed), so only the affected BSs/pools
+        pay compute.  The resulting replica sets are identical to
+        :meth:`insert_patterns` by construction — same deterministic control
+        flow, memoized intermediates keyed on exact inputs.  The deltas are
+        then patched **in place**: ``state.delta`` rows are updated (the
+        :class:`PlacementState` object and its aliases survive) and only the
+        changed rows of the :class:`RouteIndex` are re-derived.
+
+        Returns a report dict (changed rows, journal hit/miss counters,
+        wall time).  Non-geolayer placements have no incremental structure
+        to exploit, and non-stepwise routing policies (random/greedy) derive
+        their whole table from the final placement — both fall back to
+        :meth:`insert_patterns` so the routing policy is never silently
+        mixed with nearest-replica patches.
+        """
+        if self.placement_name != "geolayer" or self.routing_name != "stepwise":
+            self.insert_patterns(new_patterns)
+            return {"fallback": "full", "n_new": len(new_patterns)}
+        t0 = time.perf_counter()
+        self.workload = Workload.from_patterns(
+            list(self.workload.patterns) + list(new_patterns),
+            self.workload.n_items,
+            self.workload.n_dcs,
+        )
+        j = self._placement_journal
+        hits0, miss0 = j.hits, j.misses
+        new_state, pstats = self._place(self.placement_name, seed=0, route=False)
+        changed = np.where((new_state.delta != self.state.delta).any(axis=1))[0]
+        self.state.delta[changed] = new_state.delta[changed]
+        if self.route_index is not None:
+            self._resync_route_index()
+            self.route_index.patch_rows(self.state.delta, changed)
+        else:
+            from ..streaming.migration import _reroute_items
+
+            _reroute_items(self.state, self.env, changed)
+        self.stats.placement_stats = pstats
+        return {
+            "n_new": len(new_patterns),
+            "rows_changed": int(len(changed)),
+            "journal_hits": j.hits - hits0,
+            "journal_misses": j.misses - miss0,
+            "apply_time_s": time.perf_counter() - t0,
+        }
 
     # ---------------------------------------------------- streaming updates
     def _heat_inputs(self):
@@ -328,6 +402,8 @@ class GeoGraphStore:
         dg = self._delta_graph
         if batch.n_ops == 0:  # no-op batch: skip repair/heat entirely
             return UpdateReport(0, 0, 0, 0, 0, None, None, time.perf_counter() - t0)
+        # mutations shift the item id space -> journaled placement memos die
+        self._placement_journal = PlacementJournal()
         res = dg.apply(batch)
         g2 = dg.g
         old_n = res.old_n_nodes
@@ -438,6 +514,7 @@ class GeoGraphStore:
         """
         dg = self._delta_graph
         old_n = self.g.n_nodes
+        self._placement_journal = PlacementJournal()  # ids renumbered
         gc, vmap, emap = dg.compact()
         vkeep = np.where(dg.node_alive)[0]
         ekeep = np.where(dg.edge_alive)[0]

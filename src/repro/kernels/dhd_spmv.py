@@ -15,6 +15,16 @@ The full heat / n_out vectors stay resident in VMEM as (n, 1) blocks
 block-diffused per cluster by the control plane, which is exactly how the
 paper confines DHD runs to clusters).  Overflow edges beyond kmax live in a
 COO tail handled by ``ops.dhd_step`` with segment ops.
+
+Arbitrary row counts are handled by padding inside the wrappers: pad rows
+are isolated zero-weight self-loops (no flow in or out, |N^out| = 0), so the
+padded result sliced back to ``n`` rows is exact and any cluster size takes
+the kernel path.
+
+``dhd_ell_step_batch`` runs B independent heat fields over one shared column
+structure with a 2-D grid (batch × row-blocks); ``vals`` may be per-batch
+(``[B, n, kmax]``), which is how the placement arena diffuses every
+candidate's super-node topology in a single launch.
 """
 from __future__ import annotations
 
@@ -25,7 +35,36 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["dhd_ell_step"]
+__all__ = ["dhd_ell_step", "dhd_ell_step_batch"]
+
+
+def _pad_rows(
+    heat: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray, block_n: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, int]:
+    """Pad to a row-count multiple of ``block_n`` with isolated self-loops.
+
+    ``heat`` may be [n] or [B, n]; ``vals`` [n, kmax] or [B, n, kmax].
+    Pad rows get heat 0 and zero-weight self-edges, so they never exchange
+    heat with real rows and the sliced result is exact."""
+    n = heat.shape[-1]
+    kmax = cols.shape[1]
+    n_pad = -(-n // block_n) * block_n
+    if n_pad == n:
+        return heat, cols, vals, n
+    pad = n_pad - n
+    pad_cols = jnp.broadcast_to(
+        jnp.arange(n, n_pad, dtype=cols.dtype)[:, None], (pad, kmax)
+    )
+    cols = jnp.concatenate([cols, pad_cols], axis=0)
+    if vals.ndim == 3:
+        vals = jnp.concatenate(
+            [vals, jnp.zeros((vals.shape[0], pad, kmax), vals.dtype)], axis=1
+        )
+    else:
+        vals = jnp.concatenate([vals, jnp.zeros((pad, kmax), vals.dtype)], axis=0)
+    zpad = jnp.zeros((*heat.shape[:-1], pad), heat.dtype)
+    heat = jnp.concatenate([heat, zpad], axis=-1)
+    return heat, cols, vals, n
 
 
 def _count_kernel(h_ref, cols_ref, vals_ref, nout_ref):
@@ -79,22 +118,23 @@ def dhd_ell_step(
     interpret: bool = True,
 ) -> jnp.ndarray:
     """One DHD update; ELL part only (COO tail composed in ``ops.dhd_step``)."""
-    n, kmax = cols.shape
+    n = heat.shape[0]
     block_n = min(block_n, n)
-    assert n % block_n == 0, "pad n to a multiple of block_n"
-    grid = (n // block_n,)
-    h2d = heat[:, None].astype(jnp.float32)  # (n, 1) — VMEM-resident layout
+    heat_p, cols, vals, _ = _pad_rows(heat, cols, vals, block_n)
+    n_pad, kmax = cols.shape
+    grid = (n_pad // block_n,)
+    h2d = heat_p[:, None].astype(jnp.float32)  # (n, 1) — VMEM-resident layout
 
     n_out = pl.pallas_call(
         _count_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((n, 1), lambda i: (0, 0)),  # full heat
+            pl.BlockSpec((n_pad, 1), lambda i: (0, 0)),  # full heat
             pl.BlockSpec((block_n, kmax), lambda i: (i, 0)),
             pl.BlockSpec((block_n, kmax), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
         interpret=interpret,
     )(h2d, cols, vals)
 
@@ -102,14 +142,118 @@ def dhd_ell_step(
         functools.partial(_flow_kernel, alpha=alpha),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((n, 1), lambda i: (0, 0)),
-            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n_pad, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n_pad, 1), lambda i: (0, 0)),
             pl.BlockSpec((block_n, kmax), lambda i: (i, 0)),
             pl.BlockSpec((block_n, kmax), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
         interpret=interpret,
     )(h2d, n_out, cols, vals)
 
-    return (1.0 - gamma) * (heat + delta[:, 0]) + beta * q
+    return (1.0 - gamma) * (heat + delta[:n, 0]) + beta * q
+
+
+# ----------------------------------------------------------- batched variant
+def _count_kernel_batch(h_ref, cols_ref, vals_ref, nout_ref):
+    i = pl.program_id(1)
+    cols = cols_ref[...]  # [block_n, kmax]
+    block_n = cols.shape[0]
+    vals = vals_ref[...]
+    if vals.ndim == 3:  # per-batch weights arrive as a (1, block_n, kmax) block
+        vals = vals[0]
+    heat = h_ref[0, :]  # this batch row's full heat vector in VMEM
+    h_u = jax.lax.dynamic_slice(heat, (i * block_n,), (block_n,))[:, None]
+    h_nb = jnp.take(heat, cols, axis=0)
+    out_mask = (vals > 0) & (h_u > h_nb)
+    nout_ref[0, :] = out_mask.sum(axis=1).astype(jnp.float32)
+
+
+def _flow_kernel_batch(h_ref, nout_ref, cols_ref, vals_ref, delta_ref, *, alpha: float):
+    i = pl.program_id(1)
+    cols = cols_ref[...]
+    block_n = cols.shape[0]
+    vals = vals_ref[...]
+    if vals.ndim == 3:
+        vals = vals[0]
+    heat = h_ref[0, :]
+    n_out = nout_ref[0, :]
+    h_u = jax.lax.dynamic_slice(heat, (i * block_n,), (block_n,))[:, None]
+    nout_u = jnp.maximum(
+        jax.lax.dynamic_slice(n_out, (i * block_n,), (block_n,)), 1.0
+    )[:, None]
+    h_nb = jnp.take(heat, cols, axis=0)
+    nout_nb = jnp.maximum(jnp.take(n_out, cols, axis=0), 1.0)
+    out_mask = (vals > 0) & (h_u > h_nb)
+    in_mask = (vals > 0) & (h_nb > h_u)
+    outflow = (alpha / nout_u * vals * jnp.where(out_mask, h_u - h_nb, 0.0)).sum(
+        axis=1
+    )
+    inflow = (alpha / nout_nb * vals * jnp.where(in_mask, h_nb - h_u, 0.0)).sum(
+        axis=1
+    )
+    delta_ref[0, :] = inflow - outflow
+
+
+@functools.partial(
+    jax.jit, static_argnames=("alpha", "gamma", "beta", "block_n", "interpret")
+)
+def dhd_ell_step_batch(
+    heat: jnp.ndarray,  # [B, n] float32
+    cols: jnp.ndarray,  # [n, kmax] int32 shared symmetric ELL (pad = self)
+    vals: jnp.ndarray,  # [n, kmax] shared or [B, n, kmax] per-batch weights
+    q: jnp.ndarray,  # [B, n] source heat
+    alpha: float = 0.5,
+    gamma: float = 0.1,
+    beta: float = 0.3,
+    block_n: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Batched DHD update: B heat fields, one shared column structure.
+
+    2-D grid over (batch, row-blocks); each program holds its batch row's
+    full heat/n_out vector in VMEM (same residency argument as the single
+    kernel — B small heat vectors instead of one).  With 3-D ``vals`` each
+    batch element diffuses over its own edge weights (zero = edge absent for
+    that element), matching ``ref.dhd_ell_ref_batch`` row-for-row.
+    """
+    b, n = heat.shape
+    block_n = min(block_n, n)
+    heat_p, cols, vals, _ = _pad_rows(heat, cols, vals, block_n)
+    n_pad, kmax = cols.shape
+    grid = (b, n_pad // block_n)
+    h2 = heat_p.astype(jnp.float32)  # [B, n_pad]
+    if vals.ndim == 3:
+        vals_spec = pl.BlockSpec((1, block_n, kmax), lambda bb, i: (bb, i, 0))
+    else:
+        vals_spec = pl.BlockSpec((block_n, kmax), lambda bb, i: (i, 0))
+
+    n_out = pl.pallas_call(
+        _count_kernel_batch,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n_pad), lambda bb, i: (bb, 0)),  # full heat row
+            pl.BlockSpec((block_n, kmax), lambda bb, i: (i, 0)),
+            vals_spec,
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda bb, i: (bb, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n_pad), jnp.float32),
+        interpret=interpret,
+    )(h2, cols, vals)
+
+    delta = pl.pallas_call(
+        functools.partial(_flow_kernel_batch, alpha=alpha),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n_pad), lambda bb, i: (bb, 0)),
+            pl.BlockSpec((1, n_pad), lambda bb, i: (bb, 0)),
+            pl.BlockSpec((block_n, kmax), lambda bb, i: (i, 0)),
+            vals_spec,
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda bb, i: (bb, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n_pad), jnp.float32),
+        interpret=interpret,
+    )(h2, n_out, cols, vals)
+
+    return (1.0 - gamma) * (heat + delta[:, :n]) + beta * q

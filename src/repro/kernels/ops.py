@@ -8,17 +8,26 @@ validation.  ``use_kernel`` can be pinned explicitly by callers/tests.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from collections import OrderedDict
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref
-from .dhd_spmv import dhd_ell_step
+from .dhd_spmv import dhd_ell_step, dhd_ell_step_batch
 from .embedding_bag import embedding_bag as _embedding_bag_kernel
 from .flash_attention import flash_attention as _flash_attention_kernel
 
-__all__ = ["attention", "dhd_step", "bag_lookup", "on_tpu"]
+__all__ = [
+    "attention",
+    "dhd_step",
+    "dhd_step_batch",
+    "diffuse_batch",
+    "bag_lookup",
+    "on_tpu",
+]
 
 
 def on_tpu() -> bool:
@@ -84,6 +93,53 @@ def attention(
     return ref.attention_ref(q, k, v, causal=causal, window=window)
 
 
+# --------------------------------------------------- COO-tail edge recovery
+# Rebuilding + deduping the full undirected edge list from (ELL, tail) is a
+# host-side O(nnz log nnz) pass; streaming stores call dhd_step with the SAME
+# adjacency arrays every sweep, so the deduped arrays are cached keyed on the
+# *identity* of the inputs.  Entries hold strong references to their keys'
+# arrays, so a live cache entry's ids can never be reused by a new object.
+# CONTRACT: adjacency arrays passed to dhd_step/dhd_step_batch with a tail
+# must not be mutated in place afterwards (jnp arrays — the expected input —
+# are immutable; numpy callers must replace, not rewrite, their buffers), or
+# the identity key would serve the pre-mutation edge list.
+_EDGE_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_EDGE_CACHE_MAX = 8
+_EDGE_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _tail_edges(
+    n: int, cols, vals, tail_src, tail_dst, tail_val
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Exact undirected (a, b, w) covering ELL rows + COO tail, deduped on
+    the canonical (min, max) key (an edge may sit in one endpoint's ELL row
+    while overflowing the other's)."""
+    key = (n, id(cols), id(vals), id(tail_src), id(tail_dst), id(tail_val))
+    hit = _EDGE_CACHE.get(key)
+    if hit is not None:
+        _EDGE_CACHE.move_to_end(key)
+        _EDGE_CACHE_STATS["hits"] += 1
+        return hit[1]
+    cols_np, vals_np = np.asarray(cols), np.asarray(vals)
+    iu, ik = np.nonzero(vals_np > 0)
+    e_src = np.concatenate([iu, np.asarray(tail_src)])
+    e_dst = np.concatenate([cols_np[iu, ik], np.asarray(tail_dst)])
+    e_w = np.concatenate([vals_np[iu, ik], np.asarray(tail_val)])
+    a = np.minimum(e_src, e_dst)
+    b = np.maximum(e_src, e_dst)
+    _, first = np.unique(a.astype(np.int64) * n + b, return_index=True)
+    out = (
+        jnp.asarray(a[first], jnp.int32),
+        jnp.asarray(b[first], jnp.int32),
+        jnp.asarray(e_w[first], jnp.float32),
+    )
+    _EDGE_CACHE[key] = ((cols, vals, tail_src, tail_dst, tail_val), out)
+    _EDGE_CACHE_STATS["misses"] += 1
+    while len(_EDGE_CACHE) > _EDGE_CACHE_MAX:
+        _EDGE_CACHE.popitem(last=False)
+    return out
+
+
 def dhd_step(
     heat: jnp.ndarray,
     cols: jnp.ndarray,
@@ -104,43 +160,192 @@ def dhd_step(
     kernel computes counts internally, tail edges are folded in by running
     the edge-list reference over the tail *jointly* with per-row ELL flows
     only when a tail exists (rare: >q98 degree).  Placement confines DHD to
-    clusters, so the no-tail fast path dominates.
+    clusters, so the no-tail fast path dominates.  The kernel path pads to
+    the block size internally, so any row count is eligible.
     """
     if use_kernel is None:
         use_kernel = on_tpu()
     has_tail = tail_src is not None and tail_src.size > 0
     if has_tail:
         # Tail edges change |N_u^out| globally, so the blocked kernel cannot
-        # be patched additively — reconstruct the exact undirected edge list
-        # (host-side) and use the edge-list formulation.  An edge may appear
-        # in one endpoint's ELL row while overflowing the other's, so dedupe
-        # on the canonical (min,max) key, not on direction.
-        import numpy as np
-
+        # be patched additively — use the exact edge-list formulation over
+        # the (cached) reconstructed undirected edge list.
         n = heat.shape[0]
-        cols_np, vals_np = np.asarray(cols), np.asarray(vals)
-        iu, ik = np.nonzero(vals_np > 0)
-        e_src = np.concatenate([iu, np.asarray(tail_src)])
-        e_dst = np.concatenate([cols_np[iu, ik], np.asarray(tail_dst)])
-        e_w = np.concatenate([vals_np[iu, ik], np.asarray(tail_val)])
-        a = np.minimum(e_src, e_dst)
-        b = np.maximum(e_src, e_dst)
-        _, first = np.unique(a.astype(np.int64) * n + b, return_index=True)
+        a, b, w = _tail_edges(n, cols, vals, tail_src, tail_dst, tail_val)
         from ..core.dhd import dhd_step_edges
 
         return dhd_step_edges(
-            heat,
-            jnp.asarray(a[first], jnp.int32),
-            jnp.asarray(b[first], jnp.int32),
-            jnp.asarray(e_w[first], jnp.float32),
-            q, n, alpha=alpha, gamma=gamma, beta=beta,
+            heat, a, b, w, q, n, alpha=alpha, gamma=gamma, beta=beta
         )
-    if use_kernel and heat.shape[0] % min(block_n, heat.shape[0]) == 0:
+    if use_kernel:
         return dhd_ell_step(
             heat, cols, vals, q, alpha=alpha, gamma=gamma, beta=beta,
             block_n=min(block_n, heat.shape[0]), interpret=not on_tpu(),
         )
     return ref.dhd_ell_ref(heat, cols, vals, q, alpha=alpha, gamma=gamma, beta=beta)
+
+
+def dhd_step_batch(
+    heat: jnp.ndarray,  # [B, n]
+    cols: jnp.ndarray,  # [n, kmax]
+    vals: jnp.ndarray,  # [n, kmax] shared or [B, n, kmax] per-batch
+    q: jnp.ndarray,  # [B, n]
+    tail_src: Optional[jnp.ndarray] = None,
+    tail_dst: Optional[jnp.ndarray] = None,
+    tail_val: Optional[jnp.ndarray] = None,
+    alpha: float = 0.5,
+    gamma: float = 0.1,
+    beta: float = 0.3,
+    use_kernel: Optional[bool] = None,
+    block_n: int = 256,
+) -> jnp.ndarray:
+    """Batched :func:`dhd_step`: B heat fields over one shared adjacency.
+
+    Dispatch mirrors the single-seed path: batched Pallas ELL kernel when
+    kernel-eligible, batched jnp reference otherwise, exact batched edge
+    form when a COO tail exists (shared ``vals`` only — the tail rebuild is
+    a per-adjacency operation)."""
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    has_tail = tail_src is not None and tail_src.size > 0
+    if has_tail:
+        if vals.ndim == 3:
+            raise ValueError("COO-tail batching requires shared [n, kmax] vals")
+        n = heat.shape[1]
+        a, b, w = _tail_edges(n, cols, vals, tail_src, tail_dst, tail_val)
+        from ..core.dhd import dhd_step_edges_batch
+
+        return dhd_step_edges_batch(
+            heat, a, b, w, q, n, alpha=alpha, gamma=gamma, beta=beta
+        )
+    if use_kernel:
+        return dhd_ell_step_batch(
+            heat, cols, vals, q, alpha=alpha, gamma=gamma, beta=beta,
+            block_n=min(block_n, heat.shape[1]), interpret=not on_tpu(),
+        )
+    return ref.dhd_ell_ref_batch(
+        heat, cols, vals, q, alpha=alpha, gamma=gamma, beta=beta
+    )
+
+
+# --------------------------------------------------- batched diffusion loop
+def _ell_pack_batch(
+    n: int, src: np.ndarray, dst: np.ndarray, weight: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Pack an undirected edge list into tail-free symmetric ELL, vectorized.
+
+    ``weight`` may be [m] (shared) or [B, m] (per-seed); the column structure
+    is shared so per-seed variants differ only in ``vals``."""
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    uu = np.concatenate([src, dst])
+    vv = np.concatenate([dst, src])
+    w = np.asarray(weight, np.float32)
+    wb = np.concatenate([w, w], axis=-1)  # [..., 2m]
+    order = np.argsort(uu, kind="stable")
+    uu, vv, wb = uu[order], vv[order], wb[..., order]
+    counts = np.bincount(uu, minlength=n)
+    kmax = max(int(counts.max(initial=1)), 1)
+    starts = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    pos = np.arange(len(uu)) - starts[uu]
+    cols = np.broadcast_to(np.arange(n, dtype=np.int32)[:, None], (n, kmax)).copy()
+    cols[uu, pos] = vv.astype(np.int32)
+    if w.ndim == 2:
+        vals = np.zeros((w.shape[0], n, kmax), np.float32)
+        vals[:, uu, pos] = wb
+    else:
+        vals = np.zeros((n, kmax), np.float32)
+        vals[uu, pos] = wb
+    return cols, vals
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_nodes", "n_steps", "alpha", "gamma", "beta", "half_life"),
+)
+def _diffuse_edges_loop(
+    src, dst, weight, h0, q0, *, n_nodes, n_steps, alpha, gamma, beta, half_life
+):
+    from ..core.dhd import dhd_step_edges_batch, source_heat
+
+    def body(k, h):
+        q = source_heat(q0, k, half_life=half_life)
+        return dhd_step_edges_batch(
+            h, src, dst, weight, q, n_nodes,
+            alpha=alpha, gamma=gamma, beta=beta,
+        )
+
+    return jax.lax.fori_loop(0, n_steps, body, h0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_steps", "alpha", "gamma", "beta", "half_life", "block_n", "interpret"
+    ),
+)
+def _diffuse_ell_loop(
+    cols, vals, h0, q0, *,
+    n_steps, alpha, gamma, beta, half_life, block_n, interpret
+):
+    from ..core.dhd import source_heat
+
+    def body(k, h):
+        q = source_heat(q0, k, half_life=half_life)
+        return dhd_ell_step_batch(
+            h, cols, vals, q, alpha=alpha, gamma=gamma, beta=beta,
+            block_n=block_n, interpret=interpret,
+        )
+
+    return jax.lax.fori_loop(0, n_steps, body, h0)
+
+
+def diffuse_batch(
+    n_nodes: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    weight: np.ndarray,  # [m] shared or [B, m] per-seed
+    seeds: np.ndarray,  # [B, n]
+    base_heat: Optional[np.ndarray] = None,
+    params=None,
+    n_steps: int = 32,
+    use_kernel: Optional[bool] = None,
+    block_n: int = 256,
+) -> np.ndarray:
+    """Backend for :func:`repro.core.dhd.diffuse_affinity_batch`.
+
+    Runs the whole decaying-source loop on device: the batched Pallas ELL
+    kernel (edge list packed tail-free once per call) when kernel-eligible,
+    the vmapped edge form otherwise."""
+    from ..core.dhd import DHDParams
+
+    p = params or DHDParams()
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    seeds_j = jnp.asarray(seeds, jnp.float32)
+    if base_heat is None:
+        h0 = seeds_j
+    else:
+        h0 = seeds_j + jnp.asarray(np.atleast_2d(base_heat), jnp.float32)
+    half_life = max(n_steps / 4.0, 1.0)
+    if use_kernel:
+        cols, vals = _ell_pack_batch(n_nodes, src, dst, weight)
+        h = _diffuse_ell_loop(
+            jnp.asarray(cols), jnp.asarray(vals), h0, seeds_j,
+            n_steps=n_steps, alpha=p.alpha, gamma=p.gamma, beta=p.beta,
+            half_life=half_life, block_n=min(block_n, n_nodes),
+            interpret=not on_tpu(),
+        )
+    else:
+        w = np.asarray(weight, np.float32)
+        h = _diffuse_edges_loop(
+            jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32),
+            jnp.asarray(w), h0, seeds_j,
+            n_nodes=n_nodes, n_steps=n_steps,
+            alpha=p.alpha, gamma=p.gamma, beta=p.beta, half_life=half_life,
+        )
+    return np.asarray(h)
 
 
 def bag_lookup(

@@ -11,7 +11,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["attention_ref", "dhd_ell_ref", "embedding_bag_ref"]
+__all__ = ["attention_ref", "dhd_ell_ref", "dhd_ell_ref_batch", "embedding_bag_ref"]
 
 
 def attention_ref(
@@ -76,6 +76,38 @@ def dhd_ell_ref(
     inflow = (
         alpha / n_out[cols] * vals * jnp.where(in_mask, h_nb - h_u, 0.0)
     ).sum(axis=1)
+    return (1.0 - gamma) * (heat + inflow - outflow) + beta * q
+
+
+def dhd_ell_ref_batch(
+    heat: jnp.ndarray,  # [B, n]
+    cols: jnp.ndarray,  # [n, kmax] symmetric ELL neighbor ids (shared)
+    vals: jnp.ndarray,  # [n, kmax] shared or [B, n, kmax] per-seed weights
+    q: jnp.ndarray,  # [B, n] source heat this step
+    alpha: float = 0.5,
+    gamma: float = 0.1,
+    beta: float = 0.3,
+) -> jnp.ndarray:
+    """Batched DHD step: B independent heat fields over one shared ELL
+    column structure.  ``vals`` may carry per-seed edge weights (3-D); a
+    zero weight deactivates the edge for that seed only, which is how the
+    placement arena runs per-candidate super-node topologies through one
+    shared adjacency.  Row ``b`` equals ``dhd_ell_ref(heat[b], cols,
+    vals[b], q[b])``.
+    """
+    h_nb = heat[:, cols]  # [B, n, kmax]
+    h_u = heat[:, :, None]
+    vals_b = vals if vals.ndim == 3 else vals[None]
+    active = vals_b > 0
+    out_mask = active & (h_u > h_nb)
+    in_mask = active & (h_nb > h_u)
+    n_out = jnp.maximum(out_mask.sum(axis=-1), 1).astype(heat.dtype)  # [B, n]
+    outflow = (
+        alpha / n_out[..., None] * vals_b * jnp.where(out_mask, h_u - h_nb, 0.0)
+    ).sum(axis=-1)
+    inflow = (
+        alpha / n_out[:, cols] * vals_b * jnp.where(in_mask, h_nb - h_u, 0.0)
+    ).sum(axis=-1)
     return (1.0 - gamma) * (heat + inflow - outflow) + beta * q
 
 

@@ -7,7 +7,7 @@ import pytest
 from repro.core.dhd import dhd_step_edges
 from repro.core.graph import build_csr, build_ell
 from repro.kernels import ops, ref
-from repro.kernels.dhd_spmv import dhd_ell_step
+from repro.kernels.dhd_spmv import dhd_ell_step, dhd_ell_step_batch
 from repro.kernels.embedding_bag import embedding_bag
 from repro.kernels.flash_attention import flash_attention
 
@@ -58,6 +58,89 @@ def test_dhd_kernel_matches_edge_oracle(n, kmax, block_n):
     want = dhd_step_edges(heat, jnp.asarray(a, jnp.int32), jnp.asarray(b, jnp.int32),
                           jnp.asarray(w), q, n)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5, rtol=1e-4)
+
+
+def test_dhd_kernel_pads_arbitrary_n():
+    """Non-block-multiple row counts take the kernel path via internal
+    self-loop padding instead of crashing (satellite of the batched engine)."""
+    rng = np.random.default_rng(5)
+    n = 37  # not a multiple of any block size
+    src, dst = rng.integers(0, n, 120), rng.integers(0, n, 120)
+    keep = src != dst
+    a, b = np.minimum(src, dst)[keep], np.maximum(src, dst)[keep]
+    _, i = np.unique(a.astype(np.int64) * n + b, return_index=True)
+    a, b = a[i], b[i]
+    w = (rng.random(len(a)) + 0.1).astype(np.float32)
+    csr = build_csr(n, a, b, weights=w, symmetrize=True)
+    ell = build_ell(csr, max_degree=int(csr.degree().max()))
+    heat = jnp.asarray(rng.random(n), jnp.float32)
+    q = jnp.asarray(rng.random(n) * 0.1, jnp.float32)
+    out = dhd_ell_step(heat, jnp.asarray(ell.cols), jnp.asarray(ell.vals), q,
+                       block_n=16, interpret=True)
+    want = ref.dhd_ell_ref(heat, jnp.asarray(ell.cols), jnp.asarray(ell.vals), q)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("n,kmax,block_n,B,batched_vals", [
+    (64, 8, 32, 4, False),
+    (57, 6, 16, 3, True),   # padding path + per-batch weights
+    (128, 4, 64, 2, True),
+])
+def test_dhd_kernel_batch_matches_ref(n, kmax, block_n, B, batched_vals):
+    rng = np.random.default_rng(6)
+    m = n * kmax // 4
+    src, dst = rng.integers(0, n, m), rng.integers(0, n, m)
+    keep = src != dst
+    a, b = np.minimum(src, dst)[keep], np.maximum(src, dst)[keep]
+    _, i = np.unique(a.astype(np.int64) * n + b, return_index=True)
+    a, b = a[i], b[i]
+    w = (rng.random(len(a)) + 0.1).astype(np.float32)
+    csr = build_csr(n, a, b, weights=w, symmetrize=True)
+    ell = build_ell(csr, max_degree=int(csr.degree().max()))
+    heat = jnp.asarray(rng.random((B, n)), jnp.float32)
+    q = jnp.asarray(rng.random((B, n)) * 0.1, jnp.float32)
+    if batched_vals:
+        vals = np.repeat(ell.vals[None], B, axis=0)
+        vals *= (rng.random(vals.shape) > 0.2)  # drop edges per batch element
+        vals = jnp.asarray(vals)
+    else:
+        vals = jnp.asarray(ell.vals)
+    cols = jnp.asarray(ell.cols)
+    out = dhd_ell_step_batch(heat, cols, vals, q, block_n=block_n, interpret=True)
+    want = ref.dhd_ell_ref_batch(heat, cols, vals, q)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5, rtol=1e-4)
+    # row b of the batch == the single-seed kernel on (heat[b], vals[b])
+    for k in range(B):
+        vk = vals[k] if batched_vals else vals
+        single = dhd_ell_step(heat[k], cols, vk, q[k], block_n=block_n, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out[k]), np.asarray(single), atol=1e-5, rtol=1e-4
+        )
+
+
+def test_dhd_tail_edge_cache_reused():
+    """Repeated dhd_step calls with the same adjacency arrays must hit the
+    deduped-edge cache instead of rebuilding the edge list host-side."""
+    rng = np.random.default_rng(8)
+    n = 48
+    a = rng.integers(0, n, 140)
+    b = (a + 1 + rng.integers(0, n - 1, 140)) % n
+    w = (rng.random(140) + 0.1).astype(np.float32)
+    csr = build_csr(n, a, b, weights=w, symmetrize=True)
+    ell = build_ell(csr, max_degree=2)  # forces a tail
+    assert len(ell.tail_src) > 0
+    cols, vals = jnp.asarray(ell.cols), jnp.asarray(ell.vals)
+    ts, td, tv = (jnp.asarray(ell.tail_src), jnp.asarray(ell.tail_dst),
+                  jnp.asarray(ell.tail_val))
+    heat = jnp.asarray(rng.random(n), jnp.float32)
+    q = jnp.asarray(rng.random(n) * 0.1, jnp.float32)
+    r1 = ops.dhd_step(heat, cols, vals, q, ts, td, tv)
+    hits0 = ops._EDGE_CACHE_STATS["hits"]
+    r2 = ops.dhd_step(heat, cols, vals, q, ts, td, tv)
+    rb = ops.dhd_step_batch(heat[None], cols, vals, q[None], ts, td, tv)
+    assert ops._EDGE_CACHE_STATS["hits"] >= hits0 + 2
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=0)
+    np.testing.assert_allclose(np.asarray(rb[0]), np.asarray(r1), atol=1e-6)
 
 
 def test_dhd_tail_path_exact(small_setup):

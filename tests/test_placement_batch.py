@@ -1,0 +1,312 @@
+"""Differential tests for the batched multi-seed DHD placement engine.
+
+Invariants under test:
+  * ``diffuse_affinity_batch`` == per-seed ``diffuse_affinity`` row-for-row
+    (shared weights, per-seed weights, and the batched-ELL kernel path);
+  * ``CompetitionArena`` picks the same winner as the sequential
+    ``_dhd_competition`` for every region of randomized pools;
+  * ``overlap_centric_placement`` with ``dhd_batch`` on/off is replica-set
+    identical end-to-end;
+  * ``insert_patterns_incremental`` == full ``insert_patterns`` re-place on
+    churn traces (replica sets AND routes), including after streaming
+    mutations invalidate the placement journal;
+  * batched heat-cache stepping == per-cache stepping;
+  * the vectorized ``replication_gain`` == a straightforward reference.
+"""
+import numpy as np
+import pytest
+
+from repro.core import dhd
+from repro.core.graph import build_csr
+from repro.core.latency import make_paper_env
+from repro.core.layered_graph import build_layered_graph
+from repro.core.patterns import (
+    OverlapRegion,
+    Pattern,
+    Workload,
+    decompose_overlap_regions,
+    generate_khop_patterns,
+)
+from repro.core.placement import (
+    CompetitionArena,
+    HeatCache,
+    PlacedUnit,
+    PlacementConfig,
+    _dhd_competition,
+    replication_gain,
+    step_heat_caches,
+)
+from repro.core.store import GeoGraphStore
+from repro.data.synthetic import community_graph
+
+
+def _random_edges(rng, n, m):
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    a = np.minimum(src, dst)[keep]
+    b = np.maximum(src, dst)[keep]
+    _, i = np.unique(a.astype(np.int64) * n + b, return_index=True)
+    return a[i], b[i]
+
+
+# ------------------------------------------------------- batched diffusion
+def test_diffuse_batch_matches_single_rows():
+    rng = np.random.default_rng(0)
+    n, B = 50, 6
+    a, b = _random_edges(rng, n, 200)
+    w = (rng.random(len(a)) + 0.1).astype(np.float32)
+    seeds = rng.random((B, n)).astype(np.float32)
+    batch = dhd.diffuse_affinity_batch(n, a, b, w, seeds, n_steps=10)
+    for k in range(B):
+        single = dhd.diffuse_affinity(n, a, b, w, seeds[k], n_steps=10)
+        np.testing.assert_allclose(batch[k], single, atol=1e-6, rtol=1e-5)
+
+
+def test_diffuse_batch_per_seed_weights_equal_edge_removal():
+    """Zero weight rows must behave exactly like removing the edge."""
+    rng = np.random.default_rng(1)
+    n, B = 40, 4
+    a, b = _random_edges(rng, n, 160)
+    w = (rng.random(len(a)) + 0.1).astype(np.float32)
+    wb = np.tile(w, (B, 1))
+    wb[rng.random((B, len(a))) < 0.4] = 0.0
+    seeds = rng.random((B, n)).astype(np.float32)
+    batch = dhd.diffuse_affinity_batch(n, a, b, wb, seeds, n_steps=10)
+    for k in range(B):
+        live = wb[k] > 0
+        single = dhd.diffuse_affinity(n, a[live], b[live], wb[k][live], seeds[k], n_steps=10)
+        np.testing.assert_allclose(batch[k], single, atol=1e-6, rtol=1e-5)
+
+
+def test_diffuse_batch_kernel_path_matches_edge_path():
+    rng = np.random.default_rng(2)
+    n, B = 37, 3  # deliberately not a block multiple: exercises row padding
+    a, b = _random_edges(rng, n, 120)
+    wb = (rng.random((B, len(a))) + 0.05).astype(np.float32)
+    wb[rng.random((B, len(a))) < 0.3] = 0.0
+    seeds = rng.random((B, n)).astype(np.float32)
+    edge = dhd.diffuse_affinity_batch(n, a, b, wb, seeds, n_steps=6, use_kernel=False)
+    kern = dhd.diffuse_affinity_batch(n, a, b, wb, seeds, n_steps=6, use_kernel=True)
+    np.testing.assert_allclose(kern, edge, atol=1e-5, rtol=1e-4)
+
+
+def test_dhd_step_edges_weight_gate():
+    """A zero-weight edge must not count toward |N_u^out| (absent edge)."""
+    import jax.numpy as jnp
+
+    heat = jnp.asarray([1.0, 0.0, 0.5])
+    src = jnp.asarray([0, 0], jnp.int32)
+    dst = jnp.asarray([1, 2], jnp.int32)
+    q = jnp.zeros(3)
+    with_dead = dhd.dhd_step_edges(
+        heat, src, dst, jnp.asarray([1.0, 0.0]), q, 3, gamma=0.0, beta=0.0
+    )
+    only_live = dhd.dhd_step_edges(
+        heat, jnp.asarray([0], jnp.int32), jnp.asarray([1], jnp.int32),
+        jnp.asarray([1.0]), q, 3, gamma=0.0, beta=0.0,
+    )
+    np.testing.assert_allclose(np.asarray(with_dead), np.asarray(only_live), atol=1e-7)
+
+
+# ----------------------------------------------------- arena vs sequential
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_arena_matches_sequential_competition(seed):
+    rng = np.random.default_rng(seed)
+    n_regions = int(rng.integers(6, 14))
+    n_cand = int(rng.integers(2, 6))
+    g = community_graph(320, n_communities=8, p_in=0.04, p_out=0.004,
+                        seed=seed, n_dcs=5)
+    verts = rng.permutation(g.n_nodes)
+    groups = np.array_split(verts[:160], n_regions)
+    regions = [
+        OverlapRegion(rid=i, key=(i,), items=np.sort(grp.astype(np.int64)), degree=1)
+        for i, grp in enumerate(groups)
+    ]
+    cand = []
+    for c in range(n_cand):
+        # some candidates hold nothing (exercises the -1 validity path)
+        if rng.random() < 0.2:
+            held = []
+        else:
+            held = [np.sort(rng.choice(verts[160:], size=30, replace=False).astype(np.int64))]
+        cand.append((c, np.asarray([c % 5]), held))
+    unit_r = rng.random(5) + 0.05
+    params = dhd.DHDParams()
+    arena = CompetitionArena(regions, g, cand, params, n_steps=16)
+    req = list(range(n_cand))
+    for r in regions:
+        want = _dhd_competition(r, cand, regions, g, params, 16, unit_r)
+        got = arena.winner(r.rid, req, unit_r)
+        assert got == want, f"region {r.rid}: arena={got} sequential={want}"
+
+
+def test_placement_batch_flag_is_replica_identical(small_setup):
+    g, env, csr, wl, pats = small_setup
+    from repro.core.placement import overlap_centric_placement
+
+    lg = build_layered_graph(g, env)
+    seq, _ = overlap_centric_placement(
+        lg, wl, PlacementConfig(precache=False, dhd_steps=8, dhd_batch=False)
+    )
+    bat, _ = overlap_centric_placement(
+        lg, wl, PlacementConfig(precache=False, dhd_steps=8, dhd_batch=True)
+    )
+    assert np.array_equal(seq.delta, bat.delta)
+    assert np.array_equal(seq.route, bat.route)
+
+
+# ------------------------------------------------------ incremental insert
+def _mk_store(seed=0, n_v=700, n_p=60):
+    g = community_graph(n_v, n_communities=10, p_in=0.02, p_out=0.001,
+                        seed=seed, n_dcs=5)
+    env = make_paper_env()
+    csr = build_csr(g.n_nodes, g.src, g.dst, symmetrize=True)
+    pats = generate_khop_patterns(g, csr, n_p, seed=seed + 1, n_dcs=env.n_dcs,
+                                  n_hot_sources=32)
+    wl = Workload.from_patterns(pats, g.n_items, env.n_dcs)
+    return GeoGraphStore(
+        g, env, wl, config=PlacementConfig(precache=False, dhd_steps=8)
+    ), csr
+
+
+def _new_patterns(g, csr, env, n, seed):
+    fresh = generate_khop_patterns(g, csr, n, seed=seed, n_dcs=env.n_dcs,
+                                   n_hot_sources=32)
+    return [
+        Pattern(10_000 + seed * 100 + i, p.items, p.r_py, p.w_py, p.eta)
+        for i, p in enumerate(fresh)
+    ]
+
+
+def test_incremental_insert_matches_full_replace():
+    full, csr = _mk_store()
+    inc, _ = _mk_store()
+    for rnd in range(3):
+        new = _new_patterns(full.g, csr, full.env, 3, seed=rnd)
+        state_obj = inc.state
+        full.insert_patterns(new)
+        rep = inc.insert_patterns_incremental(new)
+        assert inc.state is state_obj  # patched in place, aliases intact
+        assert np.array_equal(full.state.delta, inc.state.delta)
+        assert np.array_equal(full.state.route, inc.state.route)
+        assert rep["journal_hits"] > 0  # untouched pools replayed, not recomputed
+        assert inc.route_index.verify(inc.state.delta)
+
+
+def test_incremental_insert_after_streaming_churn():
+    """Mutations shift ids and kill the journal; the next incremental insert
+    must still be identical to a full re-place on the mutated store."""
+    from repro.streaming import DeltaGraph, random_churn_batch
+
+    full, _ = _mk_store(seed=5)
+    inc, _ = _mk_store(seed=5)
+    for store, s in ((full, 11), (inc, 11)):
+        store._delta_graph = DeltaGraph(store.g)
+        store.apply_updates(random_churn_batch(store._delta_graph, 0.02,
+                                               np.random.default_rng(s)))
+    assert np.array_equal(full.state.delta, inc.state.delta)
+    csr = build_csr(full.g.n_nodes, full.g.src, full.g.dst, symmetrize=True)
+    new = _new_patterns(full.g, csr, full.env, 3, seed=77)
+    full.insert_patterns(new)
+    inc.insert_patterns_incremental(new)
+    assert np.array_equal(full.state.delta, inc.state.delta)
+    assert np.array_equal(full.state.route, inc.state.route)
+
+
+def test_incremental_insert_baseline_fallback():
+    g = community_graph(200, n_communities=4, seed=0, n_dcs=5)
+    env = make_paper_env()
+    csr = build_csr(g.n_nodes, g.src, g.dst, symmetrize=True)
+    pats = generate_khop_patterns(g, csr, 10, seed=1, n_dcs=env.n_dcs)
+    wl = Workload.from_patterns(pats, g.n_items, env.n_dcs)
+    store = GeoGraphStore(g, env, wl, placement="random", routing="random",
+                          config=PlacementConfig(precache=False))
+    rep = store.insert_patterns_incremental(_new_patterns(g, csr, env, 2, seed=3))
+    assert rep.get("fallback") == "full"
+    assert len(store.workload.patterns) == 12
+    # geolayer + non-stepwise routing must also re-place fully: patching
+    # nearest-replica rows into a greedy table would mix routing policies
+    greedy = GeoGraphStore(g, env, wl, placement="geolayer", routing="greedy",
+                           config=PlacementConfig(precache=False))
+    rep = greedy.insert_patterns_incremental(_new_patterns(g, csr, env, 2, seed=4))
+    assert rep.get("fallback") == "full"
+
+
+# --------------------------------------------------------- batched caches
+def test_step_heat_caches_matches_individual(small_setup, small_store):
+    """Oracle is the pre-batching per-cache body (direct diffuse_affinity
+    over the cache topology + edge-row decay), NOT the shared batched code."""
+    g, env, csr, wl, pats = small_setup
+    rng = np.random.default_rng(3)
+    caches = [HeatCache(g, d, small_store.state) for d in range(3)]
+    want = []
+    for c in caches:
+        c.observe(rng.integers(0, g.n_items, 50))
+        n = g.n_nodes
+        ref_heat = c.heat.copy()
+        ref_heat[:n] = dhd.diffuse_affinity(
+            n, g.src, g.dst, np.ones(g.n_edges, dtype=np.float32),
+            c.heat[:n], params=c.params, n_steps=4,
+        )
+        ref_heat[n:] *= (1.0 - c.params.gamma) ** 4
+        want.append(ref_heat)
+    step_heat_caches(caches, n_steps=4)
+    for c, ref_heat in zip(caches, want):
+        np.testing.assert_allclose(c.heat, ref_heat, atol=1e-6, rtol=1e-5)
+
+
+# ------------------------------------------------- vectorized gain oracle
+def _gain_reference(unit, holder_dcs, children_dcs, sizes, env, lambda1, primary):
+    """The pre-vectorization formula, kept verbatim as the oracle."""
+    items = unit.items
+    size_sum = float(sizes[items].sum())
+    n_items = len(items)
+    holder_set = set(int(d) for d in holder_dcs)
+    gain = 0.0
+    for child in children_dcs:
+        child_list = [int(d) for d in child]
+        r_c = float(unit.r_py[child].sum())
+        if r_c <= 0:
+            continue
+        if primary is not None:
+            remote = ~np.isin(primary[items], child)
+            size_remote = float(sizes[items[remote]].sum())
+        else:
+            size_remote = size_sum
+        w_total = float(unit.w_py.sum())
+        outside = [d for d in sorted(holder_set) if d not in child_list] or sorted(holder_set)
+        net_mean = float(np.mean([[env.c_net[o, c] for o in outside] for c in child_list]))
+        store_mean = float(np.mean([env.c_store[c] for c in child_list]))
+        put_mean = float(np.mean([env.c_write[c] for c in child_list]))
+        read_save = r_c * size_remote * net_mean
+        assoc_save = lambda1 * r_c * n_items * 1e-6
+        store_add = size_sum * store_mean
+        write_add = w_total * (put_mean * n_items + size_remote * net_mean)
+        gain += read_save + assoc_save - store_add - write_add
+    return gain
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_replication_gain_vectorized_matches_reference(seed, paper_env):
+    env = paper_env
+    rng = np.random.default_rng(seed)
+    n_items_total = 120
+    sizes = (rng.random(n_items_total) * 40 + 1).astype(np.float32)
+    primary = rng.integers(0, env.n_dcs, n_items_total)
+    for _ in range(10):
+        items = np.unique(rng.integers(0, n_items_total, 25))
+        unit = PlacedUnit(
+            items=items,
+            r_py=rng.random(env.n_dcs) * rng.integers(0, 30, env.n_dcs),
+            w_py=rng.random(env.n_dcs) * (rng.random(env.n_dcs) < 0.4),
+            eta=1.0, key=(0,),
+        )
+        holder = np.unique(rng.integers(0, env.n_dcs, 3))
+        children = [
+            np.unique(rng.integers(0, env.n_dcs, rng.integers(1, 3)))
+            for _ in range(rng.integers(1, 4))
+        ]
+        want = _gain_reference(unit, holder, children, sizes, env, 0.5, primary)
+        got = replication_gain(unit, holder, children, sizes, env, 0.5, primary)
+        np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-12)
