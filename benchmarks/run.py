@@ -23,6 +23,7 @@ def main() -> None:
         bench_exec_time,
         bench_heterogeneity,
         bench_kernels,
+        bench_migration,
         bench_offline,
         bench_online,
         bench_optimality,
@@ -45,6 +46,7 @@ def main() -> None:
         "streaming": bench_streaming.run,
         "serving": bench_serving.run,
         "placement": bench_placement.run,
+        "migration": bench_migration.run,
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

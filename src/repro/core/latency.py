@@ -78,6 +78,15 @@ class GeoEnvironment:
         np.fill_diagonal(bw, np.inf)
         return bw
 
+    def link_budget_bytes(self, window_s: float) -> np.ndarray:
+        """[src, dst] WAN bytes one migration window can ship per link.
+
+        The link-granular form of the paper's migration condition ξ (Eq. 14):
+        a transfer wave may load each (src, dst) link with at most
+        ``bw_Bps * window_s`` bytes.  The diagonal is +inf — co-located
+        copies never cross the WAN."""
+        return self.bw_Bps_safe() * float(window_s)
+
     def edge_latency(self, d: int, dprime: int, size_bytes: float = 0.0) -> float:
         """Latency level assigned to a cross-partition edge (Def. 1 delta)."""
         return self.request_latency(d, dprime, size_bytes)

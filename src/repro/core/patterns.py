@@ -173,13 +173,58 @@ class OverlapRegion:
 
 
 def decompose_overlap_regions(
-    patterns: Sequence[Pattern], n_items: int
+    patterns: Sequence[Pattern], n_items: int, vectorized: bool = True
 ) -> List[OverlapRegion]:
     """Split a pattern set into disjoint Venn regions (paper Fig. 4a).
 
     Items sharing the same membership bitmask form one region.  Scales to
     many patterns because only realized bitmasks are materialized.
+
+    The default path stacks every (item, pattern) incidence pair, builds the
+    bit-packed membership matrix, and groups identical rows with one
+    ``np.unique(axis=0)`` pass — no per-item Python loop (this was the next
+    placement hot spot once pool decompositions became journal-cached).
+    ``vectorized=False`` keeps the per-item dict reference it is
+    oracle-tested against in ``tests/test_patterns.py``; the two agree
+    whenever pattern ids are distinct and each pattern's items are unique —
+    invariants every generator in this repo upholds (the reference would
+    key duplicate incidences as repeated pids).
     """
+    if not vectorized:
+        return _decompose_overlap_regions_py(patterns, n_items)
+    pats = sorted((p for p in patterns if len(p.items)), key=lambda p: p.pid)
+    if not pats:
+        return []
+    P = len(pats)
+    counts = [len(p.items) for p in pats]
+    items_all = np.concatenate([np.asarray(p.items, dtype=np.int64) for p in pats])
+    col = np.repeat(np.arange(P, dtype=np.int64), counts)
+    touched, inv = np.unique(items_all, return_inverse=True)
+    member = np.zeros((len(touched), P), dtype=bool)
+    member[inv, col] = True
+    # columns are in ascending-pid order, so a row's set bits read out as the
+    # sorted key tuple; packing keeps np.unique's row compare at P/8 bytes
+    packed = np.packbits(member, axis=1)
+    rows, region_of = np.unique(packed, axis=0, return_inverse=True)
+    order = np.argsort(region_of, kind="stable")  # items ascending per region
+    bounds = np.concatenate([[0], np.cumsum(np.bincount(region_of, minlength=len(rows)))])
+    pid_arr = np.asarray([p.pid for p in pats], dtype=np.int64)
+    keyed: List[Tuple[Tuple[int, ...], np.ndarray]] = []
+    for r in range(len(rows)):
+        bits = np.unpackbits(rows[r])[:P].astype(bool)
+        key = tuple(int(q) for q in pid_arr[bits])
+        keyed.append((key, touched[order[bounds[r] : bounds[r + 1]]]))
+    keyed.sort(key=lambda kv: kv[0])  # the reference orders cells by key
+    return [
+        OverlapRegion(rid=rid, key=key, items=items, degree=len(key))
+        for rid, (key, items) in enumerate(keyed)
+    ]
+
+
+def _decompose_overlap_regions_py(
+    patterns: Sequence[Pattern], n_items: int
+) -> List[OverlapRegion]:
+    """Per-item membership-dict reference (the pre-vectorization path)."""
     membership: Dict[int, List[int]] = {}
     for p in patterns:
         for x in p.items.tolist():

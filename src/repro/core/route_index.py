@@ -184,14 +184,28 @@ class RouteIndex:
         groups: Dict[Tuple[int, str], List[int]] = {}
         for m in moves:
             groups.setdefault((int(m.dc), m.kind), []).append(int(m.item))
-        # drops first: the drop path re-derives vacated slots from the final
-        # delta, so adds resolved afterwards see consistent cached state
-        for (dc, kind), its in sorted(groups.items(), key=lambda kv: kv[0][1] != "drop"):
-            arr = np.asarray(sorted(set(its)), dtype=np.int64)
+        self.apply_grouped(
+            delta,
+            [(dc, kind, np.asarray(its, dtype=np.int64))
+             for (dc, kind), its in sorted(groups.items())],
+        )
+
+    def apply_grouped(
+        self, delta: np.ndarray, groups: Sequence[Tuple[int, str, np.ndarray]]
+    ) -> None:
+        """Patch pre-grouped replica-set deltas: ``(dc, kind, items)`` triples.
+
+        The array-native entry the migration transfer pipeline uses per wave
+        (a :class:`~repro.streaming.migration.TransferBatch` is already one
+        ``(dst, "add", items)`` group — no per-move Python loop).  Drops go
+        first: the drop path re-derives vacated slots from the final delta,
+        so adds resolved afterwards see consistent cached state."""
+        for dc, kind, its in sorted(groups, key=lambda t: t[1] != "drop"):
+            arr = np.unique(np.asarray(its, dtype=np.int64))
             if kind == "add":
-                self.add_replicas(delta, arr, dc)
+                self.add_replicas(delta, arr, int(dc))
             else:
-                self.drop_replicas(delta, arr, dc)
+                self.drop_replicas(delta, arr, int(dc))
 
     # ------------------------------------------------------ id-space deltas
     def grow(self, old_n_nodes: int, n_new_vertices: int, n_new_edges: int) -> None:

@@ -117,11 +117,18 @@ def route_online_batch(
     count is bounded by the layer's cluster width, not the batch size.
     """
     env = lg.env
-    if sizes is None:
-        sizes = lg.g.item_size()
     R = len(requests)
     if R == 0:
         return []
+    if R == 1:
+        # size-1 fast path: the flat batch machinery (request-id bookkeeping,
+        # [R, D] coverage stacks) costs ~2x the scalar router at R == 1
+        # (BENCH_serving batch-1 speedup was 0.48) and the scalar path is
+        # definitionally request-identical
+        items, origin = requests[0]
+        return [route_online(lg, state, np.asarray(items), int(origin), sizes=sizes)]
+    if sizes is None:
+        sizes = lg.g.item_size()
     lens = np.asarray([len(np.asarray(it)) for it, _ in requests], dtype=np.int64)
     origin = np.asarray([int(o) for _, o in requests], dtype=np.int64)
     items_all = (

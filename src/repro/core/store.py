@@ -570,13 +570,31 @@ class GeoGraphStore:
                 gc.n_nodes, gc.src[alive_e], gc.dst[alive_e], w_e, q, heat0=h0
             )
 
-    def flush_migrations(self, budget_bytes: Optional[float] = None, **kw):
+    def flush_migrations(
+        self,
+        budget_bytes: Optional[float] = None,
+        window_s: Optional[float] = 60.0,
+        on_wave=None,
+        **kw,
+    ):
         """Plan + apply the cost-bounded replica move-set for the heat drift
-        accumulated since the last flush.  Returns the
-        :class:`~repro.streaming.MigrationPlan` (with ``rolled_back`` set if
-        the constraint guard reverted drops)."""
+        accumulated since the last flush.
+
+        With a ``window_s`` (the default) accepted adds are scheduled into
+        per-(src, dst) transfer waves under the per-link byte budgets
+        ``env.link_budget_bytes(window_s)`` and applied **wave by wave**:
+        after each wave the placement and :class:`RouteIndex` are mutually
+        consistent, ``on_wave(wave)`` fires (e.g. to drain a
+        :class:`~repro.serve.GraphFrontend` between waves), and drops are
+        released only once every transfer has landed.  ``window_s=None``
+        keeps the legacy single-shot application.
+
+        Returns the :class:`~repro.streaming.MigrationPlan` with
+        ``plan.schedule`` attached (wave layout, per-link budgets, pipelined
+        makespan estimate) and ``rolled_back`` set if the constraint guard
+        reverted drops."""
         from ..streaming.delta_dhd import StreamingHeat
-        from ..streaming.migration import apply_plan, plan_migrations
+        from ..streaming.migration import apply_plan, plan_migrations, schedule_transfers
 
         self._resync_route_index()
         sizes = self.g.item_size()
@@ -600,10 +618,16 @@ class GeoGraphStore:
             self.g, self.env, self.state, self.workload.r_xy, self.workload.w_xy,
             item_heat, budget_bytes, item_alive=item_alive, **kw,
         )
+        schedule = None
+        if window_s is not None:
+            schedule = schedule_transfers(plan, self.env, window_s)
+            plan.schedule = schedule
         apply_plan(
             plan, self.state, self.env, self.workload.patterns,
             self.workload.r_xy, sizes, self.config.gamma_max_s,
             route_index=self.route_index,
+            schedule=schedule,
+            on_wave=on_wave,
         )
         return plan
 

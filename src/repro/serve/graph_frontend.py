@@ -63,16 +63,22 @@ class GraphFrontend:
 
     # -------------------------------------------------------------- serving
     def flush(self) -> Dict[int, RouteResult]:
-        """Drain the queue in FIFO batches of ``max_batch``."""
+        """Drain the queue in FIFO batches of ``max_batch``.
+
+        A chunk is popped from the queue only *after* its results are
+        assigned: if ``serve_batch`` raises mid-drain, every unserved request
+        (the failing chunk included) stays queued for the next flush instead
+        of being lost.  Size-1 chunks take the scalar ``route_online`` fast
+        path inside ``serve_batch``."""
         out: Dict[int, RouteResult] = {}
         while self.queue:
             chunk = self.queue[: self.max_batch]
-            del self.queue[: self.max_batch]
             results = self.store.serve_batch(
                 [(r.items, r.origin) for r in chunk]
             )
             for req, res in zip(chunk, results):
                 req.result = res
                 out[req.rid] = res
+            del self.queue[: len(chunk)]
             self.n_served += len(chunk)
         return out

@@ -10,7 +10,9 @@ Pipeline per mutation batch:
   3. :mod:`delta_dhd`     — warm-start the DHD steady state from the previous
      equilibrium; frontier-local pre-solve through the ELL hot path.
   4. :mod:`migration`     — turn heat deltas into a cost-bounded replica
-     move-set validated against the Eq. 6 constraints.
+     move-set (vectorized planner), pack its adds into per-(src, dst)
+     transfer waves under the Table I link bandwidth budgets, and apply them
+     wave by wave, validated against the Eq. 6 constraints.
 
 The public store entry points are ``GeoGraphStore.apply_updates()`` and
 ``GeoGraphStore.flush_migrations()``.
@@ -25,7 +27,16 @@ from .mutation_log import (  # noqa: F401
     random_churn_batch,
 )
 from .delta_dhd import StreamingHeat, WarmStats  # noqa: F401
-from .migration import MigrationPlan, Move, apply_plan, plan_migrations  # noqa: F401
+from .migration import (  # noqa: F401
+    MigrationPlan,
+    MigrationSchedule,
+    Move,
+    TransferBatch,
+    TransferWave,
+    apply_plan,
+    plan_migrations,
+    schedule_transfers,
+)
 
 __all__ = [
     "MutationLog",
@@ -39,6 +50,10 @@ __all__ = [
     "WarmStats",
     "Move",
     "MigrationPlan",
+    "MigrationSchedule",
+    "TransferBatch",
+    "TransferWave",
     "plan_migrations",
+    "schedule_transfers",
     "apply_plan",
 ]

@@ -10,6 +10,7 @@ from repro.core.graph import build_csr
 from repro.core.patterns import (
     Pattern,
     Workload,
+    _decompose_overlap_regions_py,
     decompose_overlap_regions,
     generate_khop_patterns,
     region_adjacency,
@@ -50,6 +51,48 @@ def test_overlap_regions_partition(seed):
         for x in r.items:
             member = tuple(sorted(p.pid for p in pats if x in set(p.items.tolist())))
             assert member == r.key
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 100))
+def test_decompose_vectorized_matches_reference(seed):
+    """The packed-bitmask np.unique decomposition == the per-item membership
+    dict, region for region (rid, key, items, degree)."""
+    rng = np.random.default_rng(seed)
+    n_items = 80
+    pats = [
+        Pattern(i, np.unique(rng.integers(0, n_items, int(rng.integers(1, 25)))),
+                r_py=np.ones(2), w_py=np.zeros(2))
+        for i in range(int(rng.integers(1, 9)))
+    ]
+    vec = decompose_overlap_regions(pats, n_items)
+    ref = _decompose_overlap_regions_py(pats, n_items)
+    assert len(vec) == len(ref)
+    for a, b in zip(vec, ref):
+        assert a.rid == b.rid
+        assert a.key == b.key
+        assert a.degree == b.degree
+        assert np.array_equal(a.items, b.items)
+        assert a.items.dtype == b.items.dtype
+
+
+def test_decompose_vectorized_on_khop_workload(small_setup):
+    """Oracle check on the realistic generator output (the placement input)."""
+    g, env, csr, wl, pats = small_setup
+    vec = decompose_overlap_regions(pats, g.n_items)
+    ref = _decompose_overlap_regions_py(pats, g.n_items)
+    assert [(r.rid, r.key) for r in vec] == [(r.rid, r.key) for r in ref]
+    for a, b in zip(vec, ref):
+        assert np.array_equal(a.items, b.items)
+
+
+def test_decompose_edge_cases():
+    assert decompose_overlap_regions([], 10) == []
+    empty = Pattern(0, np.zeros(0, np.int64), r_py=np.ones(2), w_py=np.zeros(2))
+    assert decompose_overlap_regions([empty], 10) == []
+    one = Pattern(3, np.asarray([5, 7]), r_py=np.ones(2), w_py=np.zeros(2))
+    (r,) = decompose_overlap_regions([empty, one], 10)
+    assert r.key == (3,) and np.array_equal(r.items, [5, 7]) and r.degree == 1
 
 
 def test_aggregate_frequencies(small_setup):

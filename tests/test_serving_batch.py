@@ -66,6 +66,59 @@ def test_serve_batch_observes_heat(small_setup, small_store):
     np.testing.assert_allclose(gained[pats[0].items], 2.0)  # duplicates add
 
 
+class _FlakyStore:
+    """Store stub whose first ``serve_batch`` raises (transient failure)."""
+
+    def __init__(self, store, n_failures=1):
+        self.store = store
+        self.failures_left = n_failures
+        self.calls = 0
+
+    def serve_batch(self, reqs):
+        self.calls += 1
+        if self.failures_left > 0:
+            self.failures_left -= 1
+            raise RuntimeError("transient store failure")
+        return self.store.serve_batch(reqs)
+
+
+def test_flush_exception_preserves_queue(small_setup, small_store):
+    """Regression: flush() used to pop the chunk *before* serving it, so an
+    exception mid-drain silently lost every in-flight request."""
+    g, env, csr, wl, pats = small_setup
+    flaky = _FlakyStore(small_store)
+    fe = GraphFrontend(flaky, max_batch=4)
+    rids = [fe.submit_pattern(p, int(np.argmax(p.r_py))) for p in pats[:10]]
+    with pytest.raises(RuntimeError):
+        fe.flush()
+    # nothing served, nothing lost — the whole queue survives the failure
+    assert fe.pending == 10
+    assert fe.n_served == 0
+    assert [r.rid for r in fe.queue] == rids  # FIFO order intact
+    out = fe.flush()  # retry drains everything
+    assert sorted(out.keys()) == rids
+    assert fe.pending == 0 and fe.n_served == 10
+    for p, rid in zip(pats[:10], rids):
+        ref = small_store.serve_online(p, int(np.argmax(p.r_py)))
+        assert np.array_equal(out[rid].served_by, ref.served_by)
+
+
+def test_batch1_fast_path_parity(small_setup, small_store):
+    """The size-1 chunk fast path must stay request-identical to the scalar
+    router (it *is* the scalar router) — all result fields, not just routes."""
+    g, env, csr, wl, pats = small_setup
+    store = small_store
+    for p in pats[:8]:
+        for origin in range(env.n_dcs):
+            (b,) = route_online_batch(store.lg, store.state, [(p.items, origin)])
+            s = route_online(store.lg, store.state, p.items, origin)
+            assert np.array_equal(s.served_by, b.served_by)
+            assert s.latency_s == b.latency_s
+            assert s.per_dc_latency == b.per_dc_latency
+            assert s.layers_used == b.layers_used
+            assert s.n_missing == b.n_missing
+
+
 def test_graph_frontend_fifo_drain(small_setup, small_store):
     g, env, csr, wl, pats = small_setup
     store = small_store
