@@ -1,0 +1,187 @@
+"""Adaptive admission control vs the fixed-batch FIFO frontend.
+
+Simulated-clock serving comparison backing the control-plane PR's acceptance
+bar: the same arrival traces are replayed through three batching policies of
+the :class:`~repro.serve.AdmissionController` —
+
+  * ``fixed``    — the fixed-batch FIFO frontend: global FIFO order, a drain
+    dispatches only once ``max_batch`` requests are pending (trailing
+    partial drain when arrivals end).  This is the deprecated
+    ``GraphFrontend`` usage pattern (buffer, then flush full chunks).
+  * ``greedy``   — work-conserving fixed cap (dispatch whenever free).
+  * ``adaptive`` — the AIMD loop: batch target grows while measured latency
+    keeps deadline slack, shrinks on violation; round-robin origin fairness.
+
+Regimes: ``steady`` (Poisson-ish arrivals), ``bursty`` (synchronized arrival
+bursts), ``mixed`` (steady with interactive + bulk priority classes).
+Everything is simulated and seeded — results are exactly reproducible and
+immune to shared-runner timing noise.
+
+Acceptance (recorded in ``BENCH_scheduler.json``): adaptive beats fixed on
+p99 latency in >= 2 regimes (bursty AND steady) while staying within 10% of
+its throughput.  The ``--smoke`` lane asserts this in CI in a few seconds.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.graph import build_csr
+from repro.core.latency import make_paper_env
+from repro.core.patterns import Workload, generate_khop_patterns
+from repro.core.placement import PlacementConfig
+from repro.core.store import GeoGraphStore
+from repro.data.synthetic import community_graph
+from repro.serve import AdmissionConfig, AdmissionController, StoreClient
+
+from .common import csv_row
+
+_JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_scheduler.json"
+
+
+def _build_store(n_vertices: int, n_patterns: int, seed: int = 0) -> GeoGraphStore:
+    g = community_graph(
+        n_vertices, n_communities=20, p_in=0.02, p_out=0.0005, seed=seed, n_dcs=5
+    )
+    env = make_paper_env()
+    csr = build_csr(g.n_nodes, g.src, g.dst, symmetrize=True)
+    pats = generate_khop_patterns(
+        g, csr, n_patterns, seed=seed + 1, n_dcs=env.n_dcs, n_hot_sources=64
+    )
+    wl = Workload.from_patterns(pats, g.n_items, env.n_dcs)
+    return GeoGraphStore(g, env, wl, config=PlacementConfig(precache=False))
+
+
+Trace = List[Tuple[float, np.ndarray, int, int, float]]  # t, items, origin, prio, deadline
+
+
+def _pick(store, rng):
+    pats = [p for p in store.workload.patterns if len(p.items)]
+    p = pats[int(rng.integers(0, len(pats)))]
+    home = int(np.argmax(p.r_py))
+    origin = home if rng.random() < 0.65 else int(rng.integers(0, store.env.n_dcs))
+    return p.items, origin
+
+
+def make_trace(store, regime: str, n: int, seed: int = 0) -> Trace:
+    rng = np.random.default_rng(seed)
+    out: Trace = []
+    if regime == "steady":
+        t = 0.0
+        for _ in range(n):
+            t += float(rng.exponential(0.004))
+            items, origin = _pick(store, rng)
+            out.append((t, items, origin, 0, 0.5))
+    elif regime == "bursty":
+        burst, period, t = 80, 0.5, 0.0
+        while len(out) < n:
+            for _ in range(min(burst, n - len(out))):
+                items, origin = _pick(store, rng)
+                out.append((t + float(rng.random()) * 1e-3, items, origin, 0, 0.5))
+            t += period
+    elif regime == "mixed":
+        t = 0.0
+        for _ in range(n):
+            t += float(rng.exponential(0.004))
+            items, origin = _pick(store, rng)
+            if rng.random() < 0.7:
+                out.append((t, items, origin, 0, 0.3))  # interactive
+            else:
+                out.append((t, items, origin, 1, 3.0))  # bulk
+    else:
+        raise ValueError(regime)
+    return out
+
+
+_POLICIES = {
+    "fixed": dict(policy="fixed", fairness="fifo"),
+    "greedy": dict(policy="greedy", fairness="fifo"),
+    "adaptive": dict(policy="adaptive", fairness="round_robin"),
+}
+
+
+def run_policy(store, trace: Trace, policy: str, max_batch: int = 256) -> Dict:
+    ctl = AdmissionController(
+        store, AdmissionConfig(max_batch=max_batch, **_POLICIES[policy])
+    )
+    client = StoreClient(ctl)
+    for t, items, origin, prio, deadline in trace:
+        client.submit(items, origin, deadline_s=deadline, priority=prio, at=t)
+    done = ctl.run_until_idle()
+    assert len(done) == len(trace)
+    m = ctl.metrics()
+    by_prio: Dict[int, List[float]] = {}
+    for h in done:
+        by_prio.setdefault(h.priority, []).append(h.latency_s)
+    m["p99_by_priority"] = {
+        str(p): float(np.quantile(np.asarray(v), 0.99)) for p, v in sorted(by_prio.items())
+    }
+    del m["served_by_origin"]
+    return m
+
+
+def run(fast: bool = True, smoke: bool = False) -> None:
+    if smoke:
+        n_vertices, n_patterns, n_req = 800, 40, 500
+    else:
+        n_vertices = 2500 if fast else 8000
+        n_patterns = 80 if fast else 240
+        n_req = 2000 if fast else 8000
+    store = _build_store(n_vertices, n_patterns)
+    results: Dict = {
+        "n_items": int(store.g.n_items),
+        "n_requests_per_regime": n_req,
+        "regimes": {},
+    }
+    for regime in ("bursty", "steady", "mixed"):
+        trace = make_trace(store, regime, n_req, seed=13)
+        row: Dict = {}
+        for policy in ("fixed", "greedy", "adaptive"):
+            m = run_policy(store, trace, policy)
+            row[policy] = m
+            print(csv_row(
+                f"sched_{regime}_{policy}",
+                m["p99_s"] * 1e6,
+                f"p50_ms={m['p50_s']*1e3:.2f};p99_ms={m['p99_s']*1e3:.2f};"
+                f"rps={m['throughput_rps']:.0f};misses={m['deadline_misses']};"
+                f"mean_batch={m['mean_batch']:.1f}",
+            ))
+        row["p99_win_vs_fixed"] = row["fixed"]["p99_s"] / max(row["adaptive"]["p99_s"], 1e-12)
+        row["throughput_ratio_vs_fixed"] = (
+            row["adaptive"]["throughput_rps"] / max(row["fixed"]["throughput_rps"], 1e-12)
+        )
+        results["regimes"][regime] = row
+
+    wins = [
+        r for r, row in results["regimes"].items()
+        if row["adaptive"]["p99_s"] < row["fixed"]["p99_s"]
+        and row["throughput_ratio_vs_fixed"] >= 0.9
+    ]
+    results["accept_p99_win_regimes"] = wins
+    results["accept_adaptive_beats_fixed_ge_2_regimes"] = bool(
+        {"bursty", "steady"} <= set(wins)
+    )
+    if smoke:
+        assert {"bursty", "steady"} <= set(wins), (
+            "adaptive batching must beat the fixed-batch FIFO frontend on p99 "
+            f"at >=2 regimes within 10% throughput; wins={wins}: "
+            + json.dumps({r: {p: row[p]["p99_s"] for p in _POLICIES}
+                          for r, row in results["regimes"].items()})
+        )
+        print("# smoke OK (JSON artifact not rewritten)")
+        return
+    _JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
+    print(f"# wrote {_JSON_PATH.name}")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny CI sizes")
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    args = ap.parse_args()
+    run(fast=not args.full, smoke=args.smoke)

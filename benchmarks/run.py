@@ -29,6 +29,7 @@ def main() -> None:
         bench_optimality,
         bench_placement,
         bench_precache,
+        bench_scheduler,
         bench_serving,
         bench_streaming,
     )
@@ -47,6 +48,7 @@ def main() -> None:
         "serving": bench_serving.run,
         "placement": bench_placement.run,
         "migration": bench_migration.run,
+        "scheduler": bench_scheduler.run,
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -30,14 +30,34 @@ def main() -> None:
     print("placement stats:", store.stats.placement_stats)
     print("cost breakdown:", {k: f"{v:.4g}" for k, v in store.cost().as_dict().items()})
 
-    # 4. online mode: stepwise layered routing of pattern requests
-    lat = []
+    # 4. online mode through the serving control plane: submit requests with
+    # origin + deadline + priority, let the AdmissionController form batches
+    # adaptively (closing the loop on measured RouteResult.latency_s) and
+    # interleave background maintenance into the idle gaps
+    from repro.serve import (AdmissionConfig, AdmissionController,
+                             MaintenanceConfig, MaintenancePolicy, StoreClient)
+
+    policy = MaintenancePolicy(
+        store,
+        MaintenanceConfig(maintain_every_s=0.05, maintain_cost_s=0.002),
+    )
+    controller = AdmissionController(store, AdmissionConfig(), policy=policy)
+    client = StoreClient(controller)
+    rng = np.random.default_rng(0)
+    t = 0.0
+    handles = []
     for p in pats[160:]:
         origin = int(np.argmax(p.r_py))
-        res = store.serve_online(p, origin)
-        lat.append(res.latency_s)
-    print(f"online: {len(lat)} requests, mean latency {np.mean(lat)*1e3:.2f} ms, "
-          f"p99 {np.percentile(lat, 99)*1e3:.2f} ms")
+        t += float(rng.exponential(0.005))
+        handles.append(client.submit_pattern(p, origin, at=t, deadline_s=0.5))
+    controller.run_until_idle()
+    lat = [h.latency_s for h in handles]
+    m = controller.metrics()
+    print(f"online: {m['completed']} requests, mean latency "
+          f"{np.mean(lat)*1e3:.2f} ms, p99 {np.percentile(lat, 99)*1e3:.2f} ms, "
+          f"{m['deadline_misses']} deadline misses, "
+          f"mean batch {m['mean_batch']:.1f}")
+    print("background maintenance:", policy.stats())
 
     # 5. offline mode: top-down localization + bottom-up assembly
     plan = store.plan_offline(np.arange(g.n_nodes), n_iters=15)
@@ -45,7 +65,7 @@ def main() -> None:
           f"{plan.wan_bytes/1e6:.2f} MB assembly WAN, "
           f"{len(plan.migrated)} items migrated")
 
-    # 6. periodic maintenance: heat diffusion + cold-replica eviction
+    # 6. explicit maintenance entry (the policy calls this in idle gaps)
     print("maintenance:", store.maintain())
 
 

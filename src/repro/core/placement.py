@@ -322,13 +322,18 @@ def _digest(*arrays: np.ndarray) -> bytes:
     return h.digest()
 
 
-def _unit_fp(u: PlacedUnit) -> Tuple:
-    return (u.key, float(u.eta), _digest(u.items, u.r_py, u.w_py))
+def _unit_fp(u: PlacedUnit, uid: Optional[np.ndarray] = None) -> Tuple:
+    items = uid[u.items] if uid is not None else u.items
+    return (u.key, float(u.eta), _digest(items, u.r_py, u.w_py))
 
 
-def _cand_fp(cand: List[Tuple[int, np.ndarray, List[np.ndarray]]]) -> Tuple:
+def _cand_fp(
+    cand: List[Tuple[int, np.ndarray, List[np.ndarray]]],
+    uid: Optional[np.ndarray] = None,
+) -> Tuple:
     return tuple(
-        (cid, _digest(dcs), tuple(_digest(h) for h in held))
+        (cid, _digest(dcs),
+         tuple(_digest(uid[h] if uid is not None else h) for h in held))
         for (cid, dcs, held) in cand
     )
 
@@ -345,11 +350,18 @@ class PlacementJournal:
     what makes the result provably identical to a full re-place.
 
     Keys fingerprint unit items/frequencies and candidate holdings with
-    BLAKE2 digests; the journal must be discarded whenever the underlying
-    graph or environment changes (mutation batches, compaction).  Each memo
-    table is FIFO-bounded (``max_entries``) so repeated incremental inserts
-    — which retire old fingerprints every round — cannot grow it without
-    bound; evicted entries simply recompute on next use.
+    BLAKE2 digests.  When ``item_uid`` is set (the store maintains one
+    monotonically-assigned uid per item row), digests run over *uids* rather
+    than raw row indices — raw rows renumber on compaction, uids never do —
+    which makes every key **fingerprint-stable across**
+    ``GeoGraphStore._compact_in_place``: the store calls :meth:`remap` to
+    rewrite the row-indexed memo *values* (region item arrays) onto the
+    compacted id space and every key keeps matching.  Topology changes
+    (mutation batches) still discard the journal: region adjacency and heat
+    tables depend on the edge set itself, not just the pool's items.  Each
+    memo table is FIFO-bounded (``max_entries``) so repeated incremental
+    inserts — which retire old fingerprints every round — cannot grow it
+    without bound; evicted entries simply recompute on next use.
     """
 
     def __init__(self, max_entries: int = 4096) -> None:
@@ -359,10 +371,37 @@ class PlacementJournal:
         self.gain: Dict[Tuple, float] = {}
         self.hits = 0
         self.misses = 0
+        # [n_items] content-stable uid per item row; owned by the store
+        self.item_uid: Optional[np.ndarray] = None
 
     def stats(self) -> Dict[str, int]:
         return dict(hits=self.hits, misses=self.misses,
                     pools=len(self.regions), heats=len(self.heat))
+
+    def unit_fp(self, u: PlacedUnit) -> Tuple:
+        return _unit_fp(u, self.item_uid)
+
+    def cand_fp(self, cand: List[Tuple[int, np.ndarray, List[np.ndarray]]]) -> Tuple:
+        return _cand_fp(cand, self.item_uid)
+
+    def remap(self, imap: np.ndarray, item_uid: np.ndarray) -> None:
+        """Re-key row-indexed memo values onto a compacted id space.
+
+        ``imap[old_row] -> new_row`` (-1 = dropped).  Keys are uid-digests
+        and survive untouched; only region item arrays store raw rows
+        (compaction renumbers monotonically, so remapped arrays stay sorted
+        — the decompose invariant).  Gains are scalars over sizes/prices
+        that compaction preserves and survive too.  Heat tables do NOT:
+        ``region_adjacency`` runs over the raw edge arrays, which before
+        compaction still contain tombstoned edges — a post-compaction
+        recompute would exclude them, so memoized tables are cleared rather
+        than replayed stale."""
+        for regions in self.regions.values():
+            for r in regions:
+                it = imap[r.items]
+                r.items = it[it >= 0]
+        self.heat.clear()
+        self.item_uid = item_uid
 
     def memo(self, cache: Dict, key: Tuple, compute):
         hit = cache.get(key)
@@ -448,7 +487,7 @@ def overlap_centric_placement(
                 if not child_ids:
                     continue
                 if journal is not None:
-                    gkey = (_unit_fp(unit), bs_id, tuple(child_ids), to_layer)
+                    gkey = (journal.unit_fp(unit), bs_id, tuple(child_ids), to_layer)
                     gain = journal.memo(
                         journal.gain, gkey,
                         lambda: replication_gain(
@@ -472,7 +511,7 @@ def overlap_centric_placement(
         for comp, entries in list(pools[k].items()):
             units = [u for (_, u) in entries]
             pool_fp = (
-                (k, comp, tuple((bs, _unit_fp(u)) for (bs, u) in entries))
+                (k, comp, tuple((bs, journal.unit_fp(u)) for (bs, u) in entries))
                 if journal is not None else None
             )
             def _decompose():
@@ -509,7 +548,7 @@ def overlap_centric_placement(
                 if arena is None:
                     if journal is not None:
                         hv = journal.memo(
-                            journal.heat, (pool_fp, _cand_fp(cand)),
+                            journal.heat, (pool_fp, journal.cand_fp(cand)),
                             lambda: CompetitionArena._build(
                                 regions, g, cand, cfg.dhd, cfg.dhd_steps
                             ),
@@ -541,7 +580,7 @@ def overlap_centric_placement(
                 req = [cand[i] for i in req_idx]
                 if journal is not None:
                     gkey = (
-                        _unit_fp(runit), b_holder.bs_id,
+                        journal.unit_fp(runit), b_holder.bs_id,
                         tuple(cand[i][0] for i in req_idx), to_layer,
                     )
                     gain = journal.memo(

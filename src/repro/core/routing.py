@@ -42,6 +42,7 @@ class RouteResult:
     per_dc_latency: Dict[int, float]
     layers_used: int
     n_missing: int
+    wan_bytes: float = 0.0  # bytes served by non-origin DCs (WAN traffic)
 
 
 def route_online(
@@ -86,9 +87,12 @@ def route_online(
             served[hit] = dc
     # resolved latency per participating DC (Eq. 1 with S_d = served bytes)
     per_dc: Dict[int, float] = {}
+    wan = 0.0
     for dc in np.unique(served[served >= 0]):
         s_d = float(sizes[items[served == dc]].sum())
         per_dc[int(dc)] = env.request_latency(int(dc), origin, s_d)
+        if int(dc) != origin:
+            wan += s_d
     lat = max(per_dc.values()) if per_dc else 0.0
     return RouteResult(
         served_by=served,
@@ -97,6 +101,7 @@ def route_online(
         per_dc_latency=per_dc,
         layers_used=layers_used,
         n_missing=int((served < 0).sum()),
+        wan_bytes=wan,
     )
 
 
@@ -202,6 +207,7 @@ def route_online_batch(
     lat_rd[ar_R, origin] = 0.0  # local serving is free (Eq. 1)
     straggler = np.where(served_mask, lat_rd, -np.inf).max(axis=1)
     straggler[~served_mask.any(axis=1)] = 0.0
+    wan_r = bytes_rd.sum(axis=1) - bytes_rd[ar_R, origin]
     n_miss = np.bincount(req_id[~srv], minlength=R) if (~srv).any() else np.zeros(R, np.int64)
 
     # per-request materialization: all (r, dc) pairs at once, no np.unique
@@ -222,6 +228,7 @@ def route_online_batch(
                 ),
                 layers_used=int(layers_used[r]),
                 n_missing=int(n_miss[r]),
+                wan_bytes=float(wan_r[r]),
             )
         )
     return results

@@ -71,6 +71,14 @@ class UpdateReport:
 class GeoGraphStore:
     """Geo-distributed graph store with GeoLayer placement + routing.
 
+    The **data-plane kernel** of the system: placement state, routing
+    tables, heat fields and their incremental maintenance primitives
+    (``serve_batch`` / ``apply_updates`` / ``plan_flush`` + ``begin_flush``
+    / ``maintain`` / ``compact``).  *Policy* — when to drain, how large a
+    batch, when to run maintenance, how wide a migration window — lives in
+    the serving control plane (:mod:`repro.serve`: ``StoreClient`` →
+    ``AdmissionController`` → this store → ``MaintenancePolicy``).
+
     Strategy knobs allow the ablation grid of paper Fig. 16:
       placement in {"geolayer", "random", "top", "adp", "dcd"},
       routing   in {"stepwise", "random", "greedy"}.
@@ -96,10 +104,24 @@ class GeoGraphStore:
         self.routing_name = routing
         self.compact_ratio = compact_ratio
         self.route_index: Optional[RouteIndex] = None
+        # content-stable uid per item row: assigned monotonically at birth,
+        # row-selected (never renumbered) on compaction.  Placement-journal
+        # fingerprints digest uids instead of raw rows, so memo keys survive
+        # the compaction renumbering.
+        self._item_uid = np.arange(g.n_items, dtype=np.int64)
+        self._next_uid = int(g.n_items)
+        # bumped on every id-space change (mutation batch, compaction);
+        # begin_flush captures it so a WaveApplier outlives neither
+        self._id_epoch = 0
+        # compaction listeners: called with imap (old row -> new row, -1 =
+        # dropped) after the store has fully re-keyed itself, so holders of
+        # raw item rows (e.g. an AdmissionController's in-flight request
+        # handles) can remap instead of dangling
+        self._remap_listeners: List = []
         # memo of placement intermediates; populated by every geolayer
-        # placement run, replayed by insert_patterns_incremental, discarded
-        # whenever the item id space changes (mutations / compaction)
-        self._placement_journal = PlacementJournal()
+        # placement run, replayed by insert_patterns_incremental, remapped
+        # in place across compaction, discarded on topology mutations
+        self._placement_journal = self._fresh_journal()
         t0 = time.perf_counter()
         self.lg: LayeredGraph = build_layered_graph(
             g, env, latency_interval_s=latency_interval_s
@@ -122,6 +144,11 @@ class GeoGraphStore:
         self._heat_scale = None
 
     # ------------------------------------------------------------ strategies
+    def _fresh_journal(self) -> PlacementJournal:
+        j = PlacementJournal()
+        j.item_uid = self._item_uid
+        return j
+
     def _place(self, name: str, seed: int, route: bool = True) -> Tuple[PlacementState, Dict]:
         if name == "geolayer":
             return overlap_centric_placement(
@@ -211,9 +238,12 @@ class GeoGraphStore:
         sizes = self.g.item_size()
         served = self.state.route[items, origin].astype(np.int64)
         per_dc: Dict[int, float] = {}
+        wan = 0.0
         for dc in np.unique(served[served >= 0]):
             s_d = float(sizes[items[served == dc]].sum())
             per_dc[int(dc)] = self.env.request_latency(int(dc), origin, s_d)
+            if int(dc) != origin:
+                wan += s_d
         return RouteResult(
             served_by=served,
             dcs=np.unique(served[served >= 0]),
@@ -221,6 +251,7 @@ class GeoGraphStore:
             per_dc_latency=per_dc,
             layers_used=0,
             n_missing=int((served < 0).sum()),
+            wan_bytes=wan,
         )
 
     def plan_offline(
@@ -291,7 +322,7 @@ class GeoGraphStore:
             self.workload.n_items,
             self.workload.n_dcs,
         )
-        self._placement_journal = PlacementJournal()
+        self._placement_journal = self._fresh_journal()
         self.state, pstats = self._place(self.placement_name, seed=0)
         self._apply_routing(self.routing_name, seed=0)
         for cache in self.caches.values():
@@ -402,14 +433,23 @@ class GeoGraphStore:
         dg = self._delta_graph
         if batch.n_ops == 0:  # no-op batch: skip repair/heat entirely
             return UpdateReport(0, 0, 0, 0, 0, None, None, time.perf_counter() - t0)
-        # mutations shift the item id space -> journaled placement memos die
-        self._placement_journal = PlacementJournal()
+        # mutations change the edge topology -> journaled region adjacency
+        # and heat tables die (the id shift alone would be survivable now
+        # that fingerprints run over uids, but the topology change is not)
+        self._id_epoch += 1  # id space shifts; in-flight flushes go stale
         res = dg.apply(batch)
         g2 = dg.g
         old_n = res.old_n_nodes
         nv, ne = res.n_new_vertices, len(res.new_edge_ids)
 
         # --- remap item-indexed state to the shifted id space -------------
+        self._item_uid = self._grow_item_rows(self._item_uid, old_n, nv, ne, -1)
+        born = np.where(self._item_uid < 0)[0]
+        self._item_uid[born] = np.arange(
+            self._next_uid, self._next_uid + len(born), dtype=np.int64
+        )
+        self._next_uid += len(born)
+        self._placement_journal = self._fresh_journal()
         self.state.delta = self._grow_item_rows(self.state.delta, old_n, nv, ne, False)
         if self.route_index is None:
             self.state.route = self._grow_item_rows(self.state.route, old_n, nv, ne, -1)
@@ -474,6 +514,21 @@ class GeoGraphStore:
             touched=res.touched_vertices,
         )
 
+        # --- notify raw-row holders of the id-space shift -----------------
+        # Vertex inserts shift every edge-item row by nv; queued request
+        # handles (and any other subscriber) re-key through the same growth
+        # map the store's own state grew through, with tombstoned rows
+        # dropped.  Fired before the compaction trigger below so a
+        # same-batch compaction sees subscribers already in the post-growth
+        # id space and its own imap composes cleanly.
+        if self._remap_listeners:
+            old_n_items = old_n + (g2.n_edges - ne)
+            imap_g = np.empty(old_n_items, dtype=np.int64)
+            imap_g[:old_n] = np.arange(old_n)
+            imap_g[old_n:] = old_n + nv + np.arange(old_n_items - old_n)
+            imap_g[dead_mask[imap_g]] = -1
+            self._fire_remap_listeners(imap_g)
+
         # --- tombstone-ratio compaction trigger ---------------------------
         # The delta overlay grows without bound otherwise: tombstoned rows
         # keep occupying every [I, D] array and every ELL row forever.
@@ -502,6 +557,45 @@ class GeoGraphStore:
         alive = dg.n_alive_nodes + dg.n_alive_edges
         return 1.0 - alive / max(total, 1)
 
+    def compact(self) -> bool:
+        """Fold the delta overlay eagerly (maintenance-window compaction).
+
+        ``apply_updates`` compacts reactively at ``compact_ratio``; a
+        :class:`~repro.serve.MaintenancePolicy` calls this proactively when
+        an idle gap can absorb the cost.  No-op (False) when there is no
+        overlay or no tombstone to reclaim."""
+        if self._delta_graph is None or self.tombstone_ratio() <= 0.0:
+            return False
+        self._compact_in_place()
+        return True
+
+    def add_remap_listener(self, fn) -> None:
+        """Register ``fn(imap)`` to fire after every id-space re-keying —
+        mutation-batch growth (vertex inserts shift the edge block) as well
+        as compaction (``imap[old_row] -> new_row``, -1 = dropped) — with
+        the store already fully consistent in the new id space.  Holders of
+        raw item rows — queued request handles, external caches — remap
+        through it instead of dangling across the renumbering.
+
+        Bound methods are held weakly: when the subscriber (e.g. a retired
+        ``AdmissionController``) is garbage-collected, its entry is pruned on
+        the next compaction instead of pinning it alive forever."""
+        import weakref
+
+        try:
+            self._remap_listeners.append(weakref.WeakMethod(fn))
+        except TypeError:  # plain function/lambda: hold strongly
+            self._remap_listeners.append(lambda _fn=fn: _fn)
+
+    def _fire_remap_listeners(self, imap: np.ndarray) -> None:
+        live = []
+        for ref in self._remap_listeners:
+            fn = ref()
+            if fn is not None:
+                fn(imap)
+                live.append(ref)
+        self._remap_listeners = live
+
     def _compact_in_place(self) -> None:
         """Re-key every item-indexed structure onto the dense compacted graph.
 
@@ -514,12 +608,12 @@ class GeoGraphStore:
         """
         dg = self._delta_graph
         old_n = self.g.n_nodes
-        self._placement_journal = PlacementJournal()  # ids renumbered
         gc, vmap, emap = dg.compact()
         vkeep = np.where(dg.node_alive)[0]
         ekeep = np.where(dg.edge_alive)[0]
         # new row order: alive vertices (old order), then alive edges
         keep = np.concatenate([vkeep, old_n + ekeep])
+        self._item_uid = self._item_uid[keep]
 
         # placement rows + route index
         self.state.delta = self.state.delta[keep]
@@ -533,6 +627,9 @@ class GeoGraphStore:
         imap = np.full(old_n + len(emap), -1, dtype=np.int64)
         imap[:old_n] = vmap
         imap[old_n:] = np.where(emap >= 0, gc.n_nodes + emap, -1)
+        # journal keys digest uids (compaction-stable); only the row-indexed
+        # memo values need rewriting onto the renumbered id space
+        self._placement_journal.remap(imap, self._item_uid)
         pats = []
         for p in self.workload.patterns:
             it = imap[p.items]
@@ -570,32 +667,34 @@ class GeoGraphStore:
                 gc.n_nodes, gc.src[alive_e], gc.dst[alive_e], w_e, q, heat0=h0
             )
 
-    def flush_migrations(
+        # the store is consistent in the new id space: stale-flush guards
+        # trip from here on, and raw-row holders get their remap shot
+        self._id_epoch += 1
+        self._fire_remap_listeners(imap)
+
+    def plan_flush(
         self,
         budget_bytes: Optional[float] = None,
         window_s: Optional[float] = 60.0,
-        on_wave=None,
+        schedule: str = "ff",
         **kw,
     ):
-        """Plan + apply the cost-bounded replica move-set for the heat drift
-        accumulated since the last flush.
+        """Plan (but do not apply) the cost-bounded replica move-set for the
+        heat drift accumulated since the last flush.
 
-        With a ``window_s`` (the default) accepted adds are scheduled into
-        per-(src, dst) transfer waves under the per-link byte budgets
-        ``env.link_budget_bytes(window_s)`` and applied **wave by wave**:
-        after each wave the placement and :class:`RouteIndex` are mutually
-        consistent, ``on_wave(wave)`` fires (e.g. to drain a
-        :class:`~repro.serve.GraphFrontend` between waves), and drops are
-        released only once every transfer has landed.  ``window_s=None``
-        keeps the legacy single-shot application.
-
-        Returns the :class:`~repro.streaming.MigrationPlan` with
-        ``plan.schedule`` attached (wave layout, per-link budgets, pipelined
-        makespan estimate) and ``rolled_back`` set if the constraint guard
-        reverted drops."""
+        Returns a :class:`~repro.streaming.MigrationPlan`; with a
+        ``window_s`` its ``.schedule`` holds the per-link transfer waves
+        (``schedule`` picks the packing: ``"ff"`` priority-order first-fit,
+        ``"lpt"`` makespan-aware).  Pure planning: the placement, route
+        index and heat state are read, never written."""
         from ..streaming.delta_dhd import StreamingHeat
-        from ..streaming.migration import apply_plan, plan_migrations, schedule_transfers
+        from ..streaming.migration import plan_migrations, schedule_transfers
 
+        if schedule not in ("ff", "lpt"):
+            # validated here too: with window_s=None schedule_transfers (the
+            # authority on packing names) never runs, and a typo'd packing
+            # request must not silently single-shot instead
+            raise ValueError(f"unknown packing {schedule!r} (want 'ff' or 'lpt')")
         self._resync_route_index()
         sizes = self.g.item_size()
         if budget_bytes is None:
@@ -618,15 +717,77 @@ class GeoGraphStore:
             self.g, self.env, self.state, self.workload.r_xy, self.workload.w_xy,
             item_heat, budget_bytes, item_alive=item_alive, **kw,
         )
-        schedule = None
         if window_s is not None:
-            schedule = schedule_transfers(plan, self.env, window_s)
-            plan.schedule = schedule
+            plan.schedule = schedule_transfers(
+                plan, self.env, window_s, schedule=schedule
+            )
+        return plan
+
+    def begin_flush(
+        self,
+        budget_bytes: Optional[float] = None,
+        window_s: float = 60.0,
+        schedule: str = "ff",
+        **kw,
+    ):
+        """Plan a scheduled flush and hand back ``(plan, WaveApplier)``.
+
+        The control-plane entry: the caller (typically a
+        :class:`~repro.serve.MaintenancePolicy`) lands waves one at a time
+        into idle gaps via ``applier.apply_next()`` and releases drops with
+        ``applier.finish()``.  Zero-byte local adds land immediately.
+
+        The applier is epoch-guarded: if a mutation batch or compaction
+        renumbers the item id space while waves are still pending, the next
+        ``apply_next()``/``finish()`` raises
+        :class:`~repro.streaming.migration.StaleFlushError` instead of
+        applying stale rows — re-plan with a fresh ``begin_flush``."""
+        from ..streaming.migration import WaveApplier
+
+        if window_s is None:
+            raise ValueError("begin_flush needs a window_s (waves to step)")
+        plan = self.plan_flush(budget_bytes, window_s, schedule=schedule, **kw)
+        epoch = self._id_epoch
+        applier = WaveApplier(
+            plan, self.state, self.env, self.workload.patterns,
+            self.workload.r_xy, self.g.item_size(), self.config.gamma_max_s,
+            route_index=self.route_index,
+            valid_check=lambda: self._id_epoch == epoch,
+        )
+        return plan, applier
+
+    def flush_migrations(
+        self,
+        budget_bytes: Optional[float] = None,
+        window_s: Optional[float] = 60.0,
+        on_wave=None,
+        schedule: str = "ff",
+        **kw,
+    ):
+        """Plan + apply the cost-bounded replica move-set for the heat drift
+        accumulated since the last flush.
+
+        With a ``window_s`` (the default) accepted adds are scheduled into
+        per-(src, dst) transfer waves under the per-link byte budgets
+        ``env.link_budget_bytes(window_s)`` and applied **wave by wave**:
+        after each wave the placement and :class:`RouteIndex` are mutually
+        consistent, ``on_wave(wave)`` fires (e.g. to drain an
+        :class:`~repro.serve.AdmissionController` between waves), and drops
+        are released only once every transfer has landed.  ``window_s=None``
+        keeps the legacy single-shot application.
+
+        Returns the :class:`~repro.streaming.MigrationPlan` with
+        ``plan.schedule`` attached (wave layout, per-link budgets, pipelined
+        makespan estimate) and ``rolled_back`` set if the constraint guard
+        reverted drops."""
+        from ..streaming.migration import apply_plan
+
+        plan = self.plan_flush(budget_bytes, window_s, schedule=schedule, **kw)
         apply_plan(
             plan, self.state, self.env, self.workload.patterns,
-            self.workload.r_xy, sizes, self.config.gamma_max_s,
+            self.workload.r_xy, self.g.item_size(), self.config.gamma_max_s,
             route_index=self.route_index,
-            schedule=schedule,
+            schedule=plan.schedule,
             on_wave=on_wave,
         )
         return plan

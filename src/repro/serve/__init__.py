@@ -1,4 +1,49 @@
-from . import engine  # noqa: F401
-from .graph_frontend import GraphFrontend, GraphRequest  # noqa: F401
+"""Serving control plane: Client → AdmissionController → store → Policy.
 
-__all__ = ["engine", "GraphFrontend", "GraphRequest"]
+``StoreClient`` is the read-path API (futures-style handles with origin,
+deadline and priority class), ``AdmissionController`` the event-loop
+scheduler with latency-aware adaptive batching and per-origin fairness,
+``MaintenancePolicy`` the budgeted background scheduler that interleaves
+migration waves / compaction / heat maintenance into idle gaps and feeds
+measured wave transfer times back into the window estimate.
+
+``GraphFrontend`` survives as a deprecated shim; :mod:`repro.serve.engine`
+is the per-site LM slot engine (unrelated to the graph-store path) and is
+imported lazily to keep the control plane jax-free.
+"""
+from .client import BULK, INTERACTIVE, RequestHandle, StoreClient  # noqa: F401
+from .graph_frontend import GraphFrontend, GraphRequest  # noqa: F401
+from .policy import MaintenanceConfig, MaintenancePolicy  # noqa: F401
+from .scheduler import (  # noqa: F401
+    AdmissionConfig,
+    AdmissionController,
+    BatchRecord,
+    SimClock,
+)
+
+__all__ = [
+    "RequestHandle",
+    "StoreClient",
+    "INTERACTIVE",
+    "BULK",
+    "AdmissionConfig",
+    "AdmissionController",
+    "BatchRecord",
+    "SimClock",
+    "MaintenanceConfig",
+    "MaintenancePolicy",
+    "GraphFrontend",
+    "GraphRequest",
+]
+
+
+def __getattr__(name):
+    # lazy: repro.serve.engine pulls in jax + the transformer zoo, which the
+    # graph-store control plane never needs
+    if name == "engine":
+        import importlib
+
+        module = importlib.import_module(".engine", __name__)
+        globals()["engine"] = module
+        return module
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,84 +1,95 @@
-"""Request-queue frontend over ``GeoGraphStore.serve_batch`` (paper §VI).
+"""Deprecated FIFO frontend — a thin shim over the serving control plane.
 
-The graph-store counterpart of :mod:`repro.serve.engine`'s slot engine: online
-pattern requests arrive one at a time (per-origin client streams), are queued,
-and drain in batches through the vectorized stepwise router.  The frontend is
-deliberately thin — admission and batching policy only; all routing decisions
-live in the store.
+``GraphFrontend`` predates the Client / AdmissionController / Policy split:
+it exposed a synchronous queue that drained everything in fixed ``max_batch``
+chunks.  It now delegates to a :class:`~repro.serve.StoreClient` +
+:class:`~repro.serve.AdmissionController` configured to reproduce the old
+behaviour exactly (``policy="greedy"``, ``fairness="fifo"``, no deadlines),
+and emits a :class:`DeprecationWarning` at construction.  Migration path:
+
+    fe = GraphFrontend(store, max_batch=256)      # old
+    rid = fe.submit(items, origin); fe.flush()[rid]
+
+    controller = AdmissionController(store)       # new
+    client = StoreClient(controller)
+    handle = client.submit(items, origin)         # + deadline / priority
+    client.result(handle)
+
+``GraphRequest`` is kept as an alias of :class:`~repro.serve.RequestHandle`
+(same ``rid`` / ``items`` / ``origin`` / ``result`` / ``done`` surface).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+import math
+import warnings
+from typing import Dict, List
 
 import numpy as np
 
 from ..core.routing import RouteResult
+from .client import RequestHandle, StoreClient
+from .scheduler import AdmissionConfig, AdmissionController
 
 __all__ = ["GraphRequest", "GraphFrontend"]
 
-
-@dataclasses.dataclass
-class GraphRequest:
-    rid: int
-    items: np.ndarray
-    origin: int
-    result: Optional[RouteResult] = None
-
-    @property
-    def done(self) -> bool:
-        return self.result is not None
+# legacy name: the futures-style handle is a strict superset of the old
+# GraphRequest dataclass (rid / items / origin / result / done)
+GraphRequest = RequestHandle
 
 
 class GraphFrontend:
-    """FIFO request queue draining through ``store.serve_batch``.
+    """Deprecated FIFO request queue; use the control-plane stack instead.
 
-    ``max_batch`` bounds one drain chunk (router work stays cache-sized);
-    ``flush()`` serves everything pending and returns ``{rid: RouteResult}``.
+    ``max_batch`` bounds one drain chunk; ``flush()`` serves everything
+    pending and returns ``{rid: RouteResult}``.  A mid-drain exception still
+    loses nothing: the controller requeues the failing chunk.
     """
 
     def __init__(self, store, max_batch: int = 256) -> None:
+        warnings.warn(
+            "GraphFrontend is deprecated; use repro.serve.StoreClient with "
+            "an AdmissionController (and a MaintenancePolicy for background "
+            "work) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         self.store = store
         self.max_batch = int(max_batch)
-        self.queue: List[GraphRequest] = []
-        self._next_rid = 0
+        self.controller = AdmissionController(
+            store,
+            AdmissionConfig(
+                policy="greedy", fairness="fifo", max_batch=int(max_batch)
+            ),
+        )
+        self.client = StoreClient(self.controller)
         self.n_served = 0
 
     # ------------------------------------------------------------ admission
     def submit(self, items: np.ndarray, origin: int) -> int:
         """Enqueue one pattern request; returns its request id."""
-        rid = self._next_rid
-        self._next_rid += 1
-        self.queue.append(
-            GraphRequest(rid=rid, items=np.asarray(items), origin=int(origin))
-        )
-        return rid
+        return self.client.submit(items, origin, deadline_s=math.inf).rid
 
     def submit_pattern(self, pattern, origin: int) -> int:
         return self.submit(pattern.items, origin)
 
     @property
     def pending(self) -> int:
-        return len(self.queue)
+        return self.controller.pending
+
+    @property
+    def queue(self) -> List[RequestHandle]:
+        """Pending requests in FIFO order (legacy surface).
+
+        A **snapshot**, not the live list the pre-shim frontend exposed:
+        mutating it (``fe.queue.clear()`` etc.) does not cancel anything —
+        the requests live in the controller's queues and will still drain.
+        Cancellation was never part of the tested contract; callers that
+        need it should migrate to the controller API."""
+        return self.controller.pending_handles()
 
     # -------------------------------------------------------------- serving
     def flush(self) -> Dict[int, RouteResult]:
-        """Drain the queue in FIFO batches of ``max_batch``.
-
-        A chunk is popped from the queue only *after* its results are
-        assigned: if ``serve_batch`` raises mid-drain, every unserved request
-        (the failing chunk included) stays queued for the next flush instead
-        of being lost.  Size-1 chunks take the scalar ``route_online`` fast
-        path inside ``serve_batch``."""
-        out: Dict[int, RouteResult] = {}
-        while self.queue:
-            chunk = self.queue[: self.max_batch]
-            results = self.store.serve_batch(
-                [(r.items, r.origin) for r in chunk]
-            )
-            for req, res in zip(chunk, results):
-                req.result = res
-                out[req.rid] = res
-            del self.queue[: len(chunk)]
-            self.n_served += len(chunk)
-        return out
+        """Drain the queue in FIFO batches of ``max_batch``."""
+        done = self.controller.run_until_idle()
+        self.n_served += len(done)
+        return {h.rid: h.result for h in done}

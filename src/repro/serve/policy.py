@@ -1,0 +1,231 @@
+"""Budgeted background maintenance interleaved into serving idle gaps.
+
+The third leg of the control plane: the :class:`AdmissionController` owns
+the clock and offers every idle gap (router quiescent, next arrival in the
+future) to a :class:`MaintenancePolicy`, which spends it on background work
+in priority order:
+
+  1. **Migration transfer waves** — an in-flight flush
+     (``store.begin_flush`` → :class:`~repro.streaming.migration.WaveApplier`)
+     lands one :class:`~repro.streaming.migration.TransferWave` at a time;
+     serving between waves always sees a placement-consistent route table
+     (the PR 4 invariant, now scheduled instead of inline).
+  2. **Delta compaction** — proactive ``store.compact()`` below the store's
+     reactive tombstone trigger, charged at ``compact_cost_s``.
+  3. **Heat maintenance** — periodic ``store.maintain()`` (Alg. 3 diffusion
+     + eviction + residual paydown), charged at ``maintain_cost_s``.
+
+**Closing the window loop** (the second ROADMAP gap): every applied wave
+reports a *measured* transfer time (via the ``measure_wave`` hook; defaults
+to the Eq. 1 estimate when no measurement exists).  The policy tracks the
+EWMA of ``estimated / measured`` in :attr:`window_gain` and plans the next
+flush with ``effective_window() = window_s * window_gain`` — links that ship
+slower than Table I says shrink the byte budget per wave until estimates and
+measurements agree, links that ship faster widen it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Callable, Deque, Dict, Optional, Tuple
+
+from ..streaming.migration import StaleFlushError
+
+__all__ = ["MaintenanceConfig", "MaintenancePolicy"]
+
+
+@dataclasses.dataclass
+class MaintenanceConfig:
+    window_s: float = 60.0  # target transfer window (pre-correction)
+    budget_frac: Optional[float] = None  # WAN byte budget (None = store default)
+    flush_every_s: Optional[float] = None  # periodic flush cadence (None = explicit)
+    maintain_every_s: Optional[float] = None  # periodic maintain cadence
+    maintain_cost_s: float = 0.050  # simulated cost of one maintain()
+    compact_cost_s: float = 0.250  # simulated cost of one compact()
+    compact_ratio: float = 0.15  # proactive threshold (< store's reactive 0.30)
+    diffusion_steps: int = 4
+    packing: str = "ff"  # wave packing ("ff" | "lpt")
+    ewma_alpha: float = 0.5  # weight of the newest estimate/measured ratio
+    min_window_gain: float = 0.05
+    max_window_gain: float = 4.0
+    plan_kw: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+
+class MaintenancePolicy:
+    """Spends idle gaps on migration waves, compaction and heat maintenance.
+
+    ``measure_wave(wave) -> seconds`` injects the observed transfer time of
+    an applied wave (a real deployment times the bulk RPC; tests and
+    benchmarks model degraded links).  Liveness: if the next wave cannot fit
+    even the offered gap, one wave is applied anyway — a flush never stalls
+    forever behind short gaps (the controller clamps the clock advance to
+    the gap, so serving is not pushed back by the overrun).
+    """
+
+    def __init__(
+        self,
+        store,
+        config: Optional[MaintenanceConfig] = None,
+        measure_wave: Optional[Callable[[object], float]] = None,
+    ) -> None:
+        self.store = store
+        self.cfg = config or MaintenanceConfig()
+        self.measure_wave = measure_wave
+        self.window_gain = 1.0  # EWMA of estimated / measured wave makespan
+        # ring-buffered like the controller's telemetry: the policy is
+        # long-lived and periodic flushes would grow these without bound
+        self.wave_log: Deque[Tuple[float, float]] = deque(maxlen=4096)
+        self._applier = None
+        self._flush_requested = False
+        self._flush_kw: Dict[str, object] = {}
+        self._last_flush: Optional[float] = None
+        self._last_maintain: Optional[float] = None
+        self.plans: Deque[object] = deque(maxlen=64)  # most recent flush plans
+        self.n_flushes = 0
+        self.n_waves = 0
+        self.n_maintains = 0
+        self.n_compactions = 0
+        self.n_stale_flushes = 0  # appliers abandoned to an id-space change
+        self.last_maintain_report: Optional[Dict[str, float]] = None
+
+    # ------------------------------------------------------------- triggers
+    def request_flush(self, **plan_kw) -> None:
+        """Arm a migration flush; it begins in the next idle gap."""
+        self._flush_requested = True
+        self._flush_kw = dict(plan_kw)
+
+    @property
+    def flush_in_progress(self) -> bool:
+        return self._applier is not None
+
+    def effective_window(self) -> float:
+        """Measurement-corrected transfer window for the *next* schedule."""
+        return self.cfg.window_s * self.window_gain
+
+    def _record_wave(self, estimated_s: float, measured_s: float) -> None:
+        self.wave_log.append((float(estimated_s), float(measured_s)))
+        if estimated_s > 0 and measured_s > 0:
+            ratio = estimated_s / measured_s
+            a = self.cfg.ewma_alpha
+            self.window_gain = min(
+                self.cfg.max_window_gain,
+                max(self.cfg.min_window_gain,
+                    (1.0 - a) * self.window_gain + a * ratio),
+            )
+
+    def _flush_due(self, now: float) -> bool:
+        if self._applier is not None:
+            return False
+        if self._flush_requested:
+            return True
+        if self.cfg.flush_every_s is None:
+            return False
+        return self._last_flush is None or now - self._last_flush >= self.cfg.flush_every_s
+
+    def _maintain_due(self, now: float) -> bool:
+        if self.cfg.maintain_every_s is None:
+            return False
+        return (
+            self._last_maintain is None
+            or now - self._last_maintain >= self.cfg.maintain_every_s
+        )
+
+    # ------------------------------------------------------------ idle hook
+    def on_idle(self, now: float, gap_s: float, quiescent: bool = True) -> float:
+        """Fill up to ``gap_s`` seconds of router idle time; returns the
+        simulated seconds actually consumed.
+
+        ``quiescent=False`` withholds **compaction**: compacting renumbers
+        item rows, which would invalidate raw item arrays held outside the
+        store.  The controller passes True only when it is subscribed to the
+        store's remap hook (its in-flight handles re-key automatically);
+        callers without such protection pass False while requests are
+        outstanding.  Waves and ``maintain()`` only change replica sets,
+        never item ids, so they run regardless."""
+        used = 0.0
+        if self._flush_due(now):
+            budget = (
+                None if self.cfg.budget_frac is None
+                else self.cfg.budget_frac * float(self.store.g.item_size().sum())
+            )
+            kw = dict(self.cfg.plan_kw)
+            kw.update(self._flush_kw)
+            plan, self._applier = self.store.begin_flush(
+                budget_bytes=budget,
+                window_s=self.effective_window(),
+                schedule=self.cfg.packing,
+                **kw,
+            )
+            self.plans.append(plan)
+            self._flush_requested = False
+            self._flush_kw = {}
+            self._last_flush = now
+            self.n_flushes += 1
+        # 1. land transfer waves while they fit (always at least one: a wave
+        # wider than every gap must not stall the flush forever).  A
+        # StaleFlushError (mutation/compaction renumbered ids mid-flight)
+        # abandons the applier — already-landed adds are safe, drops never
+        # released — and re-arms the flush for a fresh plan next gap.
+        while self._applier is not None:
+            wave = self._applier.peek()
+            try:
+                if wave is None:
+                    self._applier.finish()  # drops release + constraint guard
+                    self._applier = None
+                    break
+                expected = wave.makespan_s / max(self.window_gain, 1e-9)
+                if used + expected > gap_s and not (used == 0.0 and expected > gap_s):
+                    break
+                wave = self._applier.apply_next()
+            except StaleFlushError:
+                self._applier = None
+                self.n_stale_flushes += 1
+                self._flush_requested = True  # re-plan against the new ids
+                break
+            measured = (
+                self.measure_wave(wave) if self.measure_wave is not None
+                else wave.makespan_s
+            )
+            self._record_wave(wave.makespan_s, measured)
+            self.n_waves += 1
+            used += measured
+            if used >= gap_s:
+                break
+        if self._applier is not None:
+            return used  # gap exhausted mid-flush; waves resume next gap
+        # 2. proactive delta compaction (only with no requests in flight)
+        if (
+            quiescent
+            and self.store.tombstone_ratio() >= self.cfg.compact_ratio
+            and used + self.cfg.compact_cost_s <= gap_s
+        ):
+            if self.store.compact():
+                self.n_compactions += 1
+                used += self.cfg.compact_cost_s
+        # 3. periodic heat maintenance (diffusion + eviction + residual)
+        if self._maintain_due(now) and used + self.cfg.maintain_cost_s <= gap_s:
+            self.last_maintain_report = self.store.maintain(
+                diffusion_steps=self.cfg.diffusion_steps
+            )
+            self._last_maintain = now
+            self.n_maintains += 1
+            used += self.cfg.maintain_cost_s
+        return used
+
+    def drain(self, now: float = 0.0) -> float:
+        """Run all armed/outstanding maintenance to completion (unbounded
+        gap) — the synchronous escape hatch for tests and shutdown paths."""
+        return self.on_idle(now, math.inf)
+
+    def stats(self) -> Dict[str, object]:
+        return {
+            "n_flushes": self.n_flushes,
+            "n_waves": self.n_waves,
+            "n_maintains": self.n_maintains,
+            "n_compactions": self.n_compactions,
+            "n_stale_flushes": self.n_stale_flushes,
+            "window_gain": self.window_gain,
+            "effective_window_s": self.effective_window(),
+            "flush_in_progress": self.flush_in_progress,
+        }

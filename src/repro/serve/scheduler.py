@@ -1,0 +1,428 @@
+"""Event-driven admission control with latency-aware adaptive batching.
+
+The :class:`AdmissionController` replaces the deprecated synchronous
+``GraphFrontend`` drain loop with an event-loop scheduler on a **simulated
+clock** (deterministic, no threads):
+
+  * requests arrive (immediately or on a replayed trace via ``at=``), are
+    queued per ``(priority class, origin DC)``, and drain in batches through
+    the data plane's vectorized ``store.serve_batch``;
+  * the **batch size closes the loop on measured routing latency**: every
+    drain observes its requests' ``RouteResult.latency_s`` (the Eq. 1 WAN
+    straggler) and the controller grows the batch target while the marginal
+    p99 stays inside the deadline slack, shrinking multiplicatively on a
+    deadline miss (AIMD) — the ROADMAP's "latency-aware batch sizing" loop;
+  * **per-origin fairness**: batches are formed round-robin across origin
+    queues (``quantum`` requests per origin per pass, priority classes
+    first), so one hot DC cannot starve the others — with ``fairness="fifo"``
+    the controller degrades to the old global-FIFO order.
+
+Timing model (all simulated seconds): dispatching a batch of R requests
+occupies the router for ``dispatch_overhead_s + R * per_request_s``; the
+batch's results return together when its straggler WAN fetch lands, so every
+request in it completes at ``dispatch + compute + max(latency_s)``.  The
+router is free to form the next batch once the compute window ends (fetches
+overlap the next drain).  Batching therefore couples a local request's
+completion to the slowest remote fetch in its batch — exactly the tension
+the adaptive policy trades against per-dispatch overhead.
+
+Routing is untouched policy-free data-plane work: the controller hands the
+formed batch to ``serve_batch`` verbatim, so results are request-for-request
+identical to calling the store directly on the same batches (asserted in
+``tests/test_control_plane.py``).
+
+Idle gaps (router quiescent, next arrival in the future) are offered to an
+attached :class:`~repro.serve.MaintenancePolicy` before the clock jumps
+forward — migration waves, compaction and heat maintenance run "between
+drains" without a second event loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .client import RequestHandle
+
+__all__ = ["SimClock", "AdmissionConfig", "BatchRecord", "AdmissionController"]
+
+
+class SimClock:
+    """Deterministic simulated clock (seconds); monotone, never wall time."""
+
+    def __init__(self, t0: float = 0.0) -> None:
+        self.t = float(t0)
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"clock cannot go backwards (dt={dt})")
+        self.t += dt
+
+    def jump_to(self, t: float) -> None:
+        self.t = max(self.t, float(t))
+
+
+@dataclasses.dataclass
+class AdmissionConfig:
+    """Scheduler knobs.  ``policy`` selects the batching discipline:
+
+    * ``"adaptive"`` (default) — AIMD batch target driven by measured
+      latency vs deadline slack; dispatches whenever the router is free.
+    * ``"greedy"`` — dispatch whenever free, fixed cap ``max_batch``
+      (work-conserving fixed batching).
+    * ``"fixed"`` — wait until ``max_batch`` requests are pending before
+      dispatching (trailing partial drain once arrivals end): the
+      fixed-batch FIFO frontend the benchmarks baseline against.
+    """
+
+    policy: str = "adaptive"
+    fairness: str = "round_robin"  # or "fifo"
+    min_batch: int = 1
+    max_batch: int = 256
+    initial_batch: int = 8
+    quantum: int = 8  # per-origin requests taken per round-robin pass
+    # simulated router occupancy per drain
+    dispatch_overhead_s: float = 2e-3
+    per_request_s: float = 2e-5
+    # AIMD loop
+    growth: float = 1.5
+    shrink: float = 0.5
+    slack_frac: float = 0.25  # grow only while slack > frac of the deadline
+    latency_window: int = 256  # sliding window backing the p99 estimate
+    # telemetry bounds: the controller is long-lived, so per-request latency
+    # samples and per-drain records are ring-buffered (quantiles read the
+    # most recent window; counts/means stay exact via running aggregates)
+    metrics_window: int = 65536
+    history_window: int = 4096
+    # per-priority-class default deadlines (index clamped to the last entry)
+    default_deadlines: Tuple[float, ...] = (0.25, 2.0)
+
+    def __post_init__(self) -> None:
+        if self.policy not in ("adaptive", "greedy", "fixed"):
+            raise ValueError(f"unknown policy {self.policy!r}")
+        if self.fairness not in ("round_robin", "fifo"):
+            raise ValueError(f"unknown fairness {self.fairness!r}")
+
+    def deadline_for(self, priority: int) -> float:
+        # clamp both ways: negative (more-urgent-than-interactive) classes
+        # take the tightest default, not a Python negative index
+        idx = min(max(priority, 0), len(self.default_deadlines) - 1)
+        return float(self.default_deadlines[idx])
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    """Telemetry for one drain (the adaptive loop's observable)."""
+
+    t_dispatch: float
+    size: int
+    target: int  # batch target when the batch was formed
+    compute_s: float  # router occupancy charged
+    straggler_s: float  # max measured RouteResult.latency_s in the batch
+    misses: int  # deadline misses produced by this drain
+
+
+class AdmissionController:
+    """Event-loop scheduler between :class:`StoreClient` and the store.
+
+    Only ``store.serve_batch`` is required of the data plane.  All state is
+    deterministic under the simulated clock; ``run_until_idle`` is the
+    drive-to-completion entry (the old ``flush()``), ``step()`` the
+    single-event one.
+    """
+
+    def __init__(self, store, config: Optional[AdmissionConfig] = None,
+                 clock: Optional[SimClock] = None, policy=None) -> None:
+        self.store = store
+        self.cfg = config or AdmissionConfig()
+        self.clock = clock or SimClock()
+        self.policy = policy  # optional MaintenancePolicy
+        self.batch_target = int(
+            min(max(self.cfg.initial_batch, self.cfg.min_batch), self.cfg.max_batch)
+        )
+        self._next_rid = 0
+        self._arrival_seq = 0
+        self._arrivals: List[Tuple[float, int, RequestHandle]] = []  # heap
+        self._fifo: Deque[RequestHandle] = deque()
+        self._queues: Dict[Tuple[int, int], Deque[RequestHandle]] = {}
+        self._rr_pos: Dict[int, int] = {}
+        self._n_pending = 0
+        self._lat_window: Deque[float] = deque(maxlen=self.cfg.latency_window)
+        self._latencies: Deque[float] = deque(maxlen=self.cfg.metrics_window)
+        self._lat_sum = 0.0
+        self._t_first_submit = math.inf
+        self._t_last_done = 0.0
+        self.completed = 0
+        self.deadline_misses = 0
+        self.served_by_origin: Dict[int, int] = {}
+        self.history: Deque[BatchRecord] = deque(maxlen=self.cfg.history_window)
+        self._n_batches = 0
+        self._batch_size_sum = 0
+        # compaction renumbers item rows; subscribing to the store's remap
+        # hook keeps in-flight handles valid, which in turn makes it safe to
+        # let the maintenance policy compact during idle gaps
+        self._remap_registered = False
+        register = getattr(store, "add_remap_listener", None)
+        if callable(register):
+            register(self._remap_pending_items)
+            self._remap_registered = True
+
+    def _remap_pending_items(self, imap: np.ndarray) -> None:
+        """Re-key every unserved handle's item rows after a compaction
+        (dropped rows vanish from the request, like they do from patterns)."""
+        pending = list(self._fifo)
+        pending += [h for q in self._queues.values() for h in q]
+        pending += [h for _, _, h in self._arrivals]
+        for h in pending:
+            it = imap[h.items]
+            h.items = it[it >= 0]
+
+    # ------------------------------------------------------------ admission
+    def submit(
+        self,
+        items: np.ndarray,
+        origin: int,
+        deadline_s: Optional[float] = None,
+        priority: int = 0,
+        at: Optional[float] = None,
+    ) -> RequestHandle:
+        """Register one request; ``at`` schedules a future arrival (trace
+        replay), otherwise the request arrives now."""
+        t = self.clock.now() if at is None else float(at)
+        h = RequestHandle(
+            rid=self._next_rid,
+            items=np.asarray(items),
+            origin=int(origin),
+            priority=int(priority),
+            deadline_s=(
+                self.cfg.deadline_for(int(priority)) if deadline_s is None
+                else float(deadline_s)
+            ),
+            t_submit=t,
+        )
+        self._next_rid += 1
+        self._t_first_submit = min(self._t_first_submit, t)
+        if t <= self.clock.now():
+            self._enqueue(h)
+        else:
+            self._arrival_seq += 1
+            heapq.heappush(self._arrivals, (t, self._arrival_seq, h))
+        return h
+
+    def _enqueue(self, h: RequestHandle) -> None:
+        if self.cfg.fairness == "fifo":
+            self._fifo.append(h)
+        else:
+            self._queues.setdefault((h.priority, h.origin), deque()).append(h)
+        self._n_pending += 1
+
+    def _admit_due(self) -> int:
+        n = 0
+        while self._arrivals and self._arrivals[0][0] <= self.clock.now():
+            _, _, h = heapq.heappop(self._arrivals)
+            self._enqueue(h)
+            n += 1
+        return n
+
+    @property
+    def pending(self) -> int:
+        """Admitted-but-unserved requests (future arrivals excluded)."""
+        return self._n_pending
+
+    @property
+    def n_scheduled(self) -> int:
+        """Future arrivals not yet admitted."""
+        return len(self._arrivals)
+
+    def pending_handles(self) -> List[RequestHandle]:
+        """Admitted pending requests in drain order (FIFO) / rid order."""
+        if self.cfg.fairness == "fifo":
+            return list(self._fifo)
+        out = [h for q in self._queues.values() for h in q]
+        out.sort(key=lambda h: h.rid)
+        return out
+
+    # ------------------------------------------------------ batch formation
+    def _target_size(self) -> int:
+        if self.cfg.policy == "adaptive":
+            return self.batch_target
+        return self.cfg.max_batch
+
+    def _form_batch(self, cap: int) -> List[RequestHandle]:
+        batch: List[RequestHandle] = []
+        if self.cfg.fairness == "fifo":
+            while self._fifo and len(batch) < cap:
+                batch.append(self._fifo.popleft())
+        else:
+            prios = sorted({p for (p, _), q in self._queues.items() if q})
+            for prio in prios:
+                if len(batch) >= cap:
+                    break
+                origins = sorted(
+                    {o for (p, o), q in self._queues.items() if p == prio and q}
+                )
+                if not origins:
+                    continue
+                start = self._rr_pos.get(prio, 0) % len(origins)
+                while len(batch) < cap:
+                    progressed = False
+                    for i in range(len(origins)):
+                        o = origins[(start + i) % len(origins)]
+                        q = self._queues.get((prio, o))
+                        take = min(self.cfg.quantum, cap - len(batch), len(q) if q else 0)
+                        for _ in range(take):
+                            batch.append(q.popleft())
+                        progressed = progressed or take > 0
+                        if len(batch) >= cap:
+                            break
+                    if not progressed:
+                        break
+                # rotate the cursor so the next batch starts one origin over
+                self._rr_pos[prio] = start + 1
+        self._n_pending -= len(batch)
+        return batch
+
+    def _requeue(self, batch: List[RequestHandle]) -> None:
+        """Put an unserved batch back at the queue fronts, order intact."""
+        if self.cfg.fairness == "fifo":
+            self._fifo.extendleft(reversed(batch))
+        else:
+            for h in reversed(batch):
+                self._queues.setdefault((h.priority, h.origin), deque()).appendleft(h)
+        self._n_pending += len(batch)
+
+    # ------------------------------------------------------------ event loop
+    def step(self) -> List[RequestHandle]:
+        """One scheduler event; returns the requests completed by it.
+
+        Guaranteed progress: either a batch is served, or the clock jumps to
+        the next scheduled arrival (idle gaps are first offered to the
+        attached maintenance policy).  Returns ``[]`` with nothing pending
+        and nothing scheduled."""
+        self._admit_due()
+        target = self._target_size()
+        waiting_to_fill = (
+            self.cfg.policy == "fixed"
+            and self._n_pending < target
+            and self._arrivals
+        )
+        if self._n_pending == 0 or waiting_to_fill:
+            if not self._arrivals:
+                if self._n_pending == 0:
+                    return []
+            else:
+                t_next = self._arrivals[0][0]
+                gap = t_next - self.clock.now()
+                if self.policy is not None and gap > 0 and self._n_pending == 0:
+                    # maintenance runs inside the gap; any overrun is
+                    # absorbed (the jump below caps the clock at t_next, so
+                    # serving is never pushed back).  Compaction is allowed
+                    # only when the remap hook keeps the scheduled handles'
+                    # item rows valid across the renumbering.
+                    self.policy.on_idle(
+                        self.clock.now(), gap, quiescent=self._remap_registered
+                    )
+                self.clock.jump_to(t_next)
+                self._admit_due()
+                return []
+        batch = self._form_batch(target)
+        t0 = self.clock.now()
+        try:
+            results = self.store.serve_batch([(h.items, h.origin) for h in batch])
+        except BaseException:
+            # nothing served, nothing lost: the whole batch returns to the
+            # queue fronts and the next step retries it
+            self._requeue(batch)
+            raise
+        compute_s = (
+            self.cfg.dispatch_overhead_s + len(batch) * self.cfg.per_request_s
+        )
+        straggler = max((r.latency_s for r in results), default=0.0)
+        t_done = t0 + compute_s + straggler
+        misses = 0
+        for h, r in zip(batch, results):
+            h.result = r
+            h.t_dispatch = t0
+            h.t_done = t_done
+            self._lat_window.append(h.latency_s)
+            self._latencies.append(h.latency_s)
+            self._lat_sum += h.latency_s
+            if h.deadline_missed:
+                misses += 1
+            self.served_by_origin[h.origin] = self.served_by_origin.get(h.origin, 0) + 1
+        self.completed += len(batch)
+        self.deadline_misses += misses
+        self._t_last_done = max(self._t_last_done, t_done)
+        self.history.append(BatchRecord(
+            t_dispatch=t0, size=len(batch), target=target,
+            compute_s=compute_s, straggler_s=straggler, misses=misses,
+        ))
+        self._n_batches += 1
+        self._batch_size_sum += len(batch)
+        self.clock.advance(compute_s)  # fetches overlap the next drain
+        self._update_target(batch)
+        return batch
+
+    def _update_target(self, batch: List[RequestHandle]) -> None:
+        """AIMD on measured latency vs deadline slack (adaptive policy)."""
+        if self.cfg.policy != "adaptive" or not batch:
+            return
+        cfg = self.cfg
+        if any(h.deadline_missed for h in batch):
+            self.batch_target = max(cfg.min_batch, int(self.batch_target * cfg.shrink))
+            return
+        grow = min(
+            cfg.max_batch,
+            max(self.batch_target + 1, int(self.batch_target * cfg.growth)),
+        )
+        bounded = [h for h in batch if math.isfinite(h.deadline_s)]
+        if not bounded:
+            # no deadline pressure: amortize overhead as hard as allowed
+            self.batch_target = grow
+            return
+        tightest = min(h.deadline_s for h in bounded)
+        slack = min(h.deadline_s - h.latency_s for h in bounded)
+        p99 = float(np.quantile(np.asarray(self._lat_window), 0.99))
+        # grow while the marginal p99 stays inside the deadline slack band
+        if slack > cfg.slack_frac * tightest and p99 <= (1.0 - cfg.slack_frac) * tightest:
+            self.batch_target = grow
+
+    def run_until_idle(self, max_steps: int = 1_000_000) -> List[RequestHandle]:
+        """Drain every pending and scheduled request; returns completions in
+        completion order (the old ``GraphFrontend.flush`` contract)."""
+        done: List[RequestHandle] = []
+        for _ in range(max_steps):
+            if self._n_pending == 0 and not self._arrivals:
+                return done
+            done.extend(self.step())
+        raise RuntimeError(f"run_until_idle did not converge in {max_steps} steps")
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self) -> Dict[str, object]:
+        lat = np.asarray(self._latencies, dtype=np.float64)
+        span = self._t_last_done - (
+            self._t_first_submit if math.isfinite(self._t_first_submit) else 0.0
+        )
+        return {
+            "completed": self.completed,
+            "deadline_misses": self.deadline_misses,
+            # quantiles over the (ring-buffered) most recent metrics_window
+            "p50_s": float(np.quantile(lat, 0.50)) if len(lat) else 0.0,
+            "p99_s": float(np.quantile(lat, 0.99)) if len(lat) else 0.0,
+            "mean_s": self._lat_sum / self.completed if self.completed else 0.0,
+            "throughput_rps": self.completed / span if span > 0 else 0.0,
+            "n_batches": self._n_batches,
+            "mean_batch": (
+                self._batch_size_sum / self._n_batches if self._n_batches else 0.0
+            ),
+            "batch_target": self.batch_target,
+            "served_by_origin": dict(sorted(self.served_by_origin.items())),
+            "sim_time_s": self.clock.now(),
+        }

@@ -58,10 +58,20 @@ __all__ = [
     "TransferBatch",
     "TransferWave",
     "MigrationSchedule",
+    "StaleFlushError",
     "plan_migrations",
     "schedule_transfers",
     "apply_plan",
+    "WaveApplier",
 ]
+
+
+class StaleFlushError(RuntimeError):
+    """The item id space changed under an in-flight flush (mutation batch or
+    compaction since ``begin_flush``); the remaining waves reference stale
+    rows and must be re-planned.  Adds already applied are safe — they only
+    widened replica sets in the pre-change id space and were remapped with
+    everything else — and drops were never released."""
 
 
 @dataclasses.dataclass
@@ -360,6 +370,7 @@ class MigrationSchedule:
     local: List[Move]  # src == dst adds: nothing crosses the WAN
     makespan_s: float  # pipelined estimate: sum of wave makespans
     oversized: int = 0  # single transfers larger than their link budget
+    packing: str = "ff"  # packing discipline that produced the waves
 
     @property
     def n_waves(self) -> int:
@@ -376,24 +387,114 @@ class MigrationSchedule:
         }
 
 
+def _pack_link_ff(ms: List[Move], cap: float) -> Tuple[List[List[Move]], int]:
+    """Sequential (next-fit) packing in plan-priority order: the current wave
+    is closed as soon as a transfer does not fit, so within a link the highest
+    benefit-density transfers always ship first."""
+    bins: List[List[Move]] = []
+    oversized = 0
+    cur: List[Move] = []
+    cur_bytes = 0.0
+    for m in ms:
+        if cur and cur_bytes + m.wan_bytes > cap:
+            bins.append(cur)
+            cur, cur_bytes = [], 0.0
+        cur.append(m)
+        cur_bytes += m.wan_bytes
+        if cur_bytes > cap:  # lone transfer larger than the link budget
+            oversized += 1
+            bins.append(cur)
+            cur, cur_bytes = [], 0.0
+    if cur:
+        bins.append(cur)
+    return bins, oversized
+
+
+def _pack_link_lpt(ms: List[Move], cap: float) -> Tuple[List[List[Move]], int]:
+    """LPT / first-fit-decreasing packing: transfers sorted by bytes
+    descending, each placed into the first wave with room.  Fewer, fuller
+    waves -> fewer straggler roundtrips per link."""
+    bins: List[List[Move]] = []
+    loads: List[float] = []
+    oversized = 0
+    order = sorted(range(len(ms)), key=lambda i: (-ms[i].wan_bytes, i))
+    for i in order:
+        m = ms[i]
+        if m.wan_bytes > cap:  # ships alone, flagged, like the ff path
+            oversized += 1
+            bins.append([m])
+            loads.append(m.wan_bytes)
+            continue
+        for j in range(len(bins)):
+            if loads[j] + m.wan_bytes <= cap and loads[j] <= cap:
+                bins[j].append(m)
+                loads[j] += m.wan_bytes
+                break
+        else:
+            bins.append([m])
+            loads.append(m.wan_bytes)
+    return bins, oversized
+
+
+def _assemble(
+    plan_links: Dict[Tuple[int, int], List[List[Move]]],
+    env: GeoEnvironment,
+) -> Tuple[List[TransferWave], float]:
+    """Zip per-link wave slots into global :class:`TransferWave`s."""
+    waves_links: Dict[int, List[TransferBatch]] = {}
+    for (s, d), bins in sorted(plan_links.items()):
+        for wave_i, cur in enumerate(bins):
+            waves_links.setdefault(wave_i, []).append(
+                TransferBatch(
+                    src=s, dst=d,
+                    items=np.asarray([m.item for m in cur], dtype=np.int64),
+                    nbytes=float(sum(m.wan_bytes for m in cur)),
+                    moves=list(cur),
+                )
+            )
+    waves: List[TransferWave] = []
+    makespan = 0.0
+    for w in sorted(waves_links):
+        links = waves_links[w]
+        span = max(
+            b.nbytes / float(env.bw_Bps[b.src, b.dst]) + float(env.rtt_s[b.src, b.dst])
+            for b in links
+        )
+        waves.append(TransferWave(index=len(waves), links=links, makespan_s=span))
+        makespan += span
+    return waves, makespan
+
+
 def schedule_transfers(
     plan: MigrationPlan,
     env: GeoEnvironment,
     window_s: float,
+    schedule: str = "ff",
 ) -> MigrationSchedule:
     """Pack a plan's adds into per-link :class:`TransferWave`s.
 
     Each accepted add ships ``wan_bytes`` over the WAN link
-    ``(move.src, move.dc)``.  Per link, transfers are packed first-fit in
-    plan-priority order under the per-link byte budget
-    ``env.link_budget_bytes(window_s)`` — a wave never carries more than one
-    migration window's worth of bytes on any link, except for a single
-    transfer that alone exceeds its link budget (shipped as its own,
-    flagged-oversized wave rather than starving forever).  Links transfer
-    concurrently within a wave; the makespan estimate per wave is the
-    straggler link's ``nbytes / bw + rtt`` (Eq. 1 applied to the bulk
+    ``(move.src, move.dc)``.  Per link, transfers are packed under the
+    per-link byte budget ``env.link_budget_bytes(window_s)`` — a wave never
+    carries more than one migration window's worth of bytes on any link,
+    except for a single transfer that alone exceeds its link budget (shipped
+    as its own, flagged-oversized wave rather than starving forever).  Links
+    transfer concurrently within a wave; the makespan estimate per wave is
+    the straggler link's ``nbytes / bw + rtt`` (Eq. 1 applied to the bulk
     payload), and the schedule's total is the sum over waves.
+
+    ``schedule`` selects the packing discipline:
+
+      * ``"ff"`` (default) — sequential first-fit in plan-priority order;
+        the highest benefit-density transfers ship in the earliest waves.
+      * ``"lpt"`` — makespan-aware longest-processing-time packing
+        (first-fit-decreasing by bytes per link).  Fuller waves shave the
+        straggler roundtrips first-fit leaves behind; the ff schedule is
+        kept as a floor, so LPT is **never worse** than first-fit on the
+        pipelined makespan estimate (the better of the two is returned).
     """
+    if schedule not in ("ff", "lpt"):
+        raise ValueError(f"unknown packing {schedule!r} (want 'ff' or 'lpt')")
     budget = env.link_budget_bytes(window_s)
     per_link: Dict[Tuple[int, int], List[Move]] = {}
     local: List[Move] = []
@@ -406,56 +507,30 @@ def schedule_transfers(
             continue
         per_link.setdefault((src, int(m.dc)), []).append(m)
 
-    # first-fit sequential packing per link (priority order preserved)
-    waves_links: Dict[int, List[TransferBatch]] = {}
-    oversized = 0
-    for (s, d), ms in sorted(per_link.items()):
-        cap = float(budget[s, d])
-        wave_i = 0
-        cur: List[Move] = []
-        cur_bytes = 0.0
-
-        def _flush() -> None:
-            nonlocal wave_i, cur, cur_bytes
-            if cur:
-                waves_links.setdefault(wave_i, []).append(
-                    TransferBatch(
-                        src=s, dst=d,
-                        items=np.asarray([m.item for m in cur], dtype=np.int64),
-                        nbytes=cur_bytes, moves=list(cur),
-                    )
-                )
-            wave_i += 1
-            cur, cur_bytes = [], 0.0
-
-        for m in ms:
-            if cur and cur_bytes + m.wan_bytes > cap:
-                _flush()
-            cur.append(m)
-            cur_bytes += m.wan_bytes
-            if cur_bytes > cap:  # lone transfer larger than the link budget
-                oversized += 1
-                _flush()
-        _flush()
-
-    waves: List[TransferWave] = []
-    makespan = 0.0
-    for w in sorted(waves_links):
-        links = waves_links[w]
-        span = max(
-            b.nbytes / float(env.bw_Bps[b.src, b.dst]) + float(env.rtt_s[b.src, b.dst])
-            for b in links
+    def _build(packer, name: str) -> MigrationSchedule:
+        plan_links: Dict[Tuple[int, int], List[List[Move]]] = {}
+        oversized = 0
+        for (s, d), ms in sorted(per_link.items()):
+            bins, over = packer(ms, float(budget[s, d]))
+            plan_links[(s, d)] = bins
+            oversized += over
+        waves, makespan = _assemble(plan_links, env)
+        return MigrationSchedule(
+            waves=waves,
+            window_s=float(window_s),
+            link_budget=budget,
+            local=local,
+            makespan_s=makespan,
+            oversized=oversized,
+            packing=name,
         )
-        waves.append(TransferWave(index=len(waves), links=links, makespan_s=span))
-        makespan += span
-    return MigrationSchedule(
-        waves=waves,
-        window_s=float(window_s),
-        link_budget=budget,
-        local=local,
-        makespan_s=makespan,
-        oversized=oversized,
-    )
+
+    ff = _build(_pack_link_ff, "ff")
+    if schedule == "ff":
+        return ff
+    lpt = _build(_pack_link_lpt, "lpt")
+    # never worse than first-fit: ties keep ff (priority order preserved)
+    return lpt if lpt.makespan_s < ff.makespan_s else ff
 
 
 # ------------------------------------------------------------- application
@@ -464,6 +539,156 @@ def _reroute_items(
 ) -> None:
     """Partial Eq. 1 nearest-replica refresh for just ``rows``."""
     state.route_nearest(env, rows=np.asarray(rows))
+
+
+def _refresh_routes(
+    state: PlacementState,
+    env: GeoEnvironment,
+    route_index: Optional["RouteIndex"],
+    rows: np.ndarray,
+    moves=None,
+) -> None:
+    """Routing refresh after a replica-set delta — the one shared path for
+    the single-shot, wave-by-wave and rollback cases."""
+    if route_index is None:
+        _reroute_items(state, env, rows)
+    elif moves is not None:
+        route_index.apply_moves(state.delta, moves)
+    else:  # rollback: replica sets changed outside the move-set shape
+        route_index.patch_rows(state.delta, rows)
+    if route_index is not None:
+        state.route = route_index.nearest
+
+
+class WaveApplier:
+    """Resumable wave-by-wave application of a scheduled plan.
+
+    The one-shot :func:`apply_plan` drives this internally; the maintenance
+    control plane (:class:`repro.serve.MaintenancePolicy`) holds one across
+    serving drains and applies waves into idle gaps one at a time.  The
+    invariants are the same as the inline path: after every completed wave
+    the placement and :class:`~repro.core.route_index.RouteIndex` are
+    mutually consistent, drops release only in :meth:`finish` (after the
+    last transfer lands), and the Eq. 6 constraint guard rolls drops back
+    wholesale if any previously-satisfied constraint regresses.
+
+    Zero-byte local adds (co-located source) land at construction time —
+    they cross no WAN link, so they never wait for a window.
+    """
+
+    def __init__(
+        self,
+        plan: MigrationPlan,
+        state: PlacementState,
+        env: GeoEnvironment,
+        patterns: Sequence,
+        r_xy: np.ndarray,
+        sizes: np.ndarray,
+        gamma_max_s: float,
+        route_index: Optional["RouteIndex"] = None,
+        valid_check: Optional[Callable[[], bool]] = None,
+    ) -> None:
+        if plan.schedule is None:
+            raise ValueError("WaveApplier needs a scheduled plan (plan.schedule)")
+        self.plan = plan
+        self.schedule = plan.schedule
+        self.state = state
+        self.env = env
+        self.patterns = patterns
+        self.r_xy = r_xy
+        self.sizes = sizes
+        self.gamma_max_s = gamma_max_s
+        self.route_index = route_index
+        # id-space guard: begin_flush wires this to the store's epoch so a
+        # mutation batch / compaction between waves raises StaleFlushError
+        # instead of applying renumbered rows
+        self.valid_check = valid_check
+        self._before = check_constraints(
+            patterns, state, r_xy, sizes, env, gamma_max_s
+        )
+        self._wave_i = 0
+        self._finished = False
+        if self.schedule.local:
+            for m in self.schedule.local:
+                state.delta[m.item, m.dc] = True
+            self._refresh(
+                np.unique([m.item for m in self.schedule.local]),
+                moves=self.schedule.local,
+            )
+
+    def _refresh(self, rows: np.ndarray, moves=None) -> None:
+        _refresh_routes(self.state, self.env, self.route_index, rows, moves)
+
+    def _ensure_valid(self) -> None:
+        if self.valid_check is not None and not self.valid_check():
+            raise StaleFlushError(
+                "item id space changed under this flush; re-plan the "
+                f"remaining {self.n_remaining} waves"
+            )
+
+    @property
+    def n_remaining(self) -> int:
+        return len(self.schedule.waves) - self._wave_i
+
+    @property
+    def done(self) -> bool:
+        return self._finished
+
+    def peek(self) -> Optional[TransferWave]:
+        """The next wave to apply (None when all waves have landed)."""
+        if self.n_remaining == 0:
+            return None
+        return self.schedule.waves[self._wave_i]
+
+    def apply_next(self) -> TransferWave:
+        """Land one wave: placement rows + route-index patch, in order."""
+        self._ensure_valid()
+        wave = self.schedule.waves[self._wave_i]
+        self._wave_i += 1
+        for b in wave.links:
+            self.state.delta[b.items, b.dst] = True
+        if self.route_index is not None:
+            self.route_index.apply_grouped(
+                self.state.delta, [(b.dst, "add", b.items) for b in wave.links]
+            )
+            self.state.route = self.route_index.nearest
+        else:
+            _reroute_items(
+                self.state, self.env,
+                np.unique(np.concatenate([b.items for b in wave.links])),
+            )
+        return wave
+
+    def finish(self) -> Dict[str, bool]:
+        """Release drops (every transfer has landed) + run the guard."""
+        self._ensure_valid()
+        if self.n_remaining:
+            raise RuntimeError(f"{self.n_remaining} waves still pending")
+        if self._finished:
+            raise RuntimeError("finish() already ran")
+        self._finished = True
+        plan, state = self.plan, self.state
+        drops = [m for m in plan.moves if m.kind == "drop"]
+        if drops:
+            for m in drops:
+                state.delta[m.item, m.dc] = False
+            self._refresh(np.unique([m.item for m in drops]), moves=drops)
+        after = check_constraints(
+            self.patterns, state, self.r_xy, self.sizes, self.env, self.gamma_max_s
+        )
+        if any(self._before[k] and not after[k] for k in self._before):
+            touched = np.unique([m.item for m in plan.moves]).astype(np.int64)
+            for m in drops:
+                state.delta[m.item, m.dc] = True
+            self._refresh(touched)
+            plan.rolled_back = len(drops)
+            plan.moves = [m for m in plan.moves if m.kind == "add"]
+            plan.est_benefit = float(sum(m.benefit for m in plan.moves))
+            after = check_constraints(
+                self.patterns, state, self.r_xy, self.sizes, self.env,
+                self.gamma_max_s,
+            )
+        return after
 
 
 def apply_plan(
@@ -482,66 +707,40 @@ def apply_plan(
 
     Without a ``schedule`` the whole move-set lands at once (the legacy
     single-shot path).  With one, adds land **wave by wave** in schedule
-    order: each wave mutates ``state.delta`` and patches the
-    :class:`~repro.core.route_index.RouteIndex` (or partially reroutes)
-    before ``on_wave(wave)`` fires, so callers can serve requests between
-    waves against a route table that is always consistent with the placement.
-    Drops are released only after the last transfer wave.
+    order through a :class:`WaveApplier`: each wave mutates ``state.delta``
+    and patches the :class:`~repro.core.route_index.RouteIndex` (or partially
+    reroutes) before ``on_wave(wave)`` fires, so callers can serve requests
+    between waves against a route table that is always consistent with the
+    placement.  Drops are released only after the last transfer wave.
 
     Invariant: no constraint that held before application is violated after —
     adds only widen the replica sets, and drops are rolled back wholesale if
     the post-check regresses.
     """
-
-    def _refresh(rows: np.ndarray, moves=None) -> None:
-        if route_index is None:
-            _reroute_items(state, env, rows)
-        elif moves is not None:
-            route_index.apply_moves(state.delta, moves)
-        else:  # rollback: replica sets changed outside the move-set shape
-            route_index.patch_rows(state.delta, rows)
-        if route_index is not None:
-            state.route = route_index.nearest
+    if schedule is not None:
+        if plan.schedule is not schedule:
+            plan.schedule = schedule
+        wa = WaveApplier(
+            plan, state, env, patterns, r_xy, sizes, gamma_max_s,
+            route_index=route_index,
+        )
+        while wa.n_remaining:
+            wave = wa.apply_next()
+            if on_wave is not None:
+                on_wave(wave)
+        return wa.finish()
 
     before = check_constraints(patterns, state, r_xy, sizes, env, gamma_max_s)
     touched = np.unique([m.item for m in plan.moves]).astype(np.int64)
-    if schedule is None:
-        for m in plan.moves:
-            state.delta[m.item, m.dc] = m.kind == "add"
-        _refresh(touched, moves=plan.moves)
-    else:
-        # zero-byte adds (co-located source) land before the first wave
-        if schedule.local:
-            for m in schedule.local:
-                state.delta[m.item, m.dc] = True
-            _refresh(
-                np.unique([m.item for m in schedule.local]), moves=schedule.local
-            )
-        for wave in schedule.waves:
-            for b in wave.links:
-                state.delta[b.items, b.dst] = True
-            if route_index is not None:
-                route_index.apply_grouped(
-                    state.delta, [(b.dst, "add", b.items) for b in wave.links]
-                )
-                state.route = route_index.nearest
-            else:
-                _reroute_items(
-                    state, env, np.unique(np.concatenate([b.items for b in wave.links]))
-                )
-            if on_wave is not None:
-                on_wave(wave)
-        drops = [m for m in plan.moves if m.kind == "drop"]
-        if drops:
-            for m in drops:
-                state.delta[m.item, m.dc] = False
-            _refresh(np.unique([m.item for m in drops]), moves=drops)
+    for m in plan.moves:
+        state.delta[m.item, m.dc] = m.kind == "add"
+    _refresh_routes(state, env, route_index, touched, moves=plan.moves)
     after = check_constraints(patterns, state, r_xy, sizes, env, gamma_max_s)
     if any(before[k] and not after[k] for k in before):
         drops = [m for m in plan.moves if m.kind == "drop"]
         for m in drops:
             state.delta[m.item, m.dc] = True
-        _refresh(touched)
+        _refresh_routes(state, env, route_index, touched)
         plan.rolled_back = len(drops)
         plan.moves = [m for m in plan.moves if m.kind == "add"]
         plan.est_benefit = float(sum(m.benefit for m in plan.moves))

@@ -214,6 +214,45 @@ def test_incremental_insert_after_streaming_churn():
     assert np.array_equal(full.state.route, inc.state.route)
 
 
+def test_journal_survives_compaction():
+    """Fingerprint-stable ids: journal keys digest per-item uids, so a
+    ``_compact_in_place`` renumbering remaps the memo values instead of
+    voiding them — the next incremental insert still replays untouched
+    pools AND stays identical to a full re-place on the compacted store."""
+    from repro.streaming import DeltaGraph, random_churn_batch
+
+    inc, _ = _mk_store(seed=9)
+    full, _ = _mk_store(seed=9)
+    for store in (inc, full):
+        store._delta_graph = DeltaGraph(store.g)
+        store.apply_updates(
+            random_churn_batch(store._delta_graph, 0.05, np.random.default_rng(3))
+        )
+    assert inc.tombstone_ratio() > 0  # there is something to compact
+    # repopulate the journal post-mutation (the topology change reset it)
+    csr = build_csr(inc.g.n_nodes, inc.g.src, inc.g.dst, symmetrize=True)
+    new1 = _new_patterns(inc.g, csr, inc.env, 3, seed=21)
+    inc.insert_patterns_incremental(new1)
+    full.insert_patterns(new1)
+    journal = inc._placement_journal
+    assert len(journal.regions) > 0
+    assert inc.compact() and full.compact()
+    assert inc._placement_journal is journal  # survived, not discarded
+    assert len(journal.regions) > 0
+    # remapped region rows live in the compacted id space
+    for regions in journal.regions.values():
+        for r in regions:
+            assert len(r.items) == 0 or r.items.max() < inc.g.n_items
+    csr2 = build_csr(inc.g.n_nodes, inc.g.src, inc.g.dst, symmetrize=True)
+    new2 = _new_patterns(inc.g, csr2, inc.env, 3, seed=22)
+    rep = inc.insert_patterns_incremental(new2)
+    full.insert_patterns(new2)
+    assert rep["journal_hits"] > 0  # compaction did not void the memos
+    assert np.array_equal(full.state.delta, inc.state.delta)
+    assert np.array_equal(full.state.route, inc.state.route)
+    assert inc.route_index.verify(inc.state.delta)
+
+
 def test_incremental_insert_baseline_fallback():
     g = community_graph(200, n_communities=4, seed=0, n_dcs=5)
     env = make_paper_env()
