@@ -28,12 +28,14 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core.dhd import DHDParams
-from repro.core.graph import build_csr
+from repro.core.graph import build_csr, build_ell
 from repro.core.latency import make_paper_env
 from repro.core.patterns import OverlapRegion, Pattern, Workload, generate_khop_patterns
 from repro.core.placement import CompetitionArena, PlacementConfig, _dhd_competition
 from repro.core.store import GeoGraphStore
 from repro.data.synthetic import community_graph
+from repro.kernels import ops
+from repro.obs import MetricsRegistry, set_default_registry
 
 from .common import csv_row, timed
 
@@ -169,6 +171,48 @@ def _insert_bench(
     ))
 
 
+# ------------------------------------------------------- edge-cache efficacy
+def _edge_cache_bench(results: Dict, n_sweeps: int, smoke: bool) -> None:
+    """Tail-edge cache hit rate on repeated DHD sweeps of one placement graph.
+
+    Streaming placement re-passes the SAME ELL + COO-tail adjacency arrays to
+    ``ops.dhd_step`` every sweep; the host-side deduped edge rebuild is cached
+    on array identity, so all sweeps after the first should hit.  Counts live
+    in the metrics registry (per-run, resettable) — the old module-global
+    leaked across benchmark runs and could never be trusted here."""
+    g = community_graph(800, n_communities=8, p_in=0.04, p_out=0.002,
+                        seed=7, n_dcs=5)
+    csr = build_csr(g.n_nodes, g.src, g.dst, symmetrize=True)
+    ell = build_ell(csr, max_degree=8)  # low cap: power-law rows spill to tail
+    assert len(ell.tail_src) > 0, "edge-cache bench graph produced no tail"
+    import jax.numpy as jnp
+
+    cols, vals = jnp.asarray(ell.cols), jnp.asarray(ell.vals)
+    ts, td, tv = (jnp.asarray(ell.tail_src), jnp.asarray(ell.tail_dst),
+                  jnp.asarray(ell.tail_val))
+    rng = np.random.default_rng(7)
+    heat = jnp.asarray(rng.random(g.n_nodes), jnp.float32)
+    q = jnp.asarray(rng.random(g.n_nodes) * 0.1, jnp.float32)
+    old_reg = set_default_registry(MetricsRegistry(enabled=True))
+    try:
+        for _ in range(n_sweeps):
+            heat = ops.dhd_step(heat, cols, vals, q, ts, td, tv, alpha=0.05)
+        cache = ops.edge_cache_stats()
+    finally:
+        set_default_registry(old_reg)
+    results["edge_cache"] = dict(n_sweeps=n_sweeps, n_tail=len(ell.tail_src),
+                                 **cache)
+    print(csv_row(
+        "placement_edge_cache",
+        cache["hit_rate"] * 100.0,
+        f"hits={cache['hits']};misses={cache['misses']};"
+        f"hit_rate={cache['hit_rate']:.3f};sweeps={n_sweeps}",
+    ))
+    if smoke:
+        assert cache["hits"] >= n_sweeps - 1, \
+            "repeated DHD sweeps missed the tail-edge cache"
+
+
 def run(fast: bool = True, smoke: bool = False) -> Dict:
     if smoke:
         sweep = [(8, 3)]
@@ -183,6 +227,7 @@ def run(fast: bool = True, smoke: bool = False) -> Dict:
     _competition_sweep(sweep, results, n_steps=16 if smoke else 32,
                        warm_sequential=not smoke)
     _insert_bench(*insert_args, results)
+    _edge_cache_bench(results, n_sweeps=8 if smoke else 32, smoke=smoke)
 
     big = [
         r for r in results["competition_sweep"]

@@ -23,23 +23,33 @@ its throughput.  The ``--smoke`` lane asserts this in CI in a few seconds.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import pathlib
 from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core.graph import build_csr
+from repro.core.graph import Graph, build_csr
 from repro.core.latency import make_paper_env
 from repro.core.patterns import Workload, generate_khop_patterns
 from repro.core.placement import PlacementConfig
 from repro.core.store import GeoGraphStore
 from repro.data.synthetic import community_graph
-from repro.serve import AdmissionConfig, AdmissionController, StoreClient
+from repro.obs import MetricsRegistry, export_chrome_trace, set_default_registry
+from repro.serve import (
+    AdmissionConfig,
+    AdmissionController,
+    MaintenanceConfig,
+    MaintenancePolicy,
+    StoreClient,
+)
+from repro.streaming import DeltaGraph, random_churn_batch
 
 from .common import csv_row
 
 _JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_scheduler.json"
+_TRACE_PATH = _JSON_PATH.with_name("BENCH_scheduler.trace.json")
 
 
 def _build_store(n_vertices: int, n_patterns: int, seed: int = 0) -> GeoGraphStore:
@@ -119,8 +129,76 @@ def run_policy(store, trace: Trace, policy: str, max_batch: int = 256) -> Dict:
     m["p99_by_priority"] = {
         str(p): float(np.quantile(np.asarray(v), 0.99)) for p, v in sorted(by_prio.items())
     }
+    m["p99_by_origin"] = {str(o): v for o, v in m["p99_by_origin"].items()}
     del m["served_by_origin"]
     return m
+
+
+def run_traced(n_req: int, seed: int = 13) -> Tuple[str, Dict]:
+    """One telemetry-enabled control-plane run: churned store, adaptive
+    policy, armed migration flush landing waves in the bursty idle gaps.
+
+    Returns ``(chrome_trace_json, summary)``.  Everything runs on the
+    simulated clock, so two calls with the same seed serialize to
+    byte-identical trace exports — asserted by the caller."""
+    # random partition (not the community graph): churn then leaves real
+    # placement drift behind, so the flush actually produces transfer waves
+    rng = np.random.default_rng(seed)
+    n, m = 220, 1400
+    src, dst = rng.integers(0, n, m), rng.integers(0, n, m)
+    keep = src != dst
+    g = Graph.from_edges(
+        n, src[keep], dst[keep], partition=rng.integers(0, 4, n)
+    )
+    env = make_paper_env()
+    csr = build_csr(g.n_nodes, g.src, g.dst, symmetrize=True)
+    pats = generate_khop_patterns(g, csr, 24, seed=seed + 1, n_dcs=env.n_dcs)
+    wl = Workload.from_patterns(pats, g.n_items, env.n_dcs)
+    store = GeoGraphStore(
+        g, env, wl, config=PlacementConfig(precache=False, dhd_steps=4)
+    )
+    rng = np.random.default_rng(seed + 100)
+    store._delta_graph = DeltaGraph(store.g)
+    for _ in range(3):
+        store.apply_updates(random_churn_batch(store._delta_graph, 0.02, rng))
+    # transfer window sized to a handful of items so the flush splits into
+    # several waves (each lands in its own idle gap)
+    window = 3.0 * float(np.median(store.g.item_size())) / float(
+        store.env.bw_Bps_safe().min()
+    )
+    old = set_default_registry(MetricsRegistry(enabled=True))
+    try:
+        policy = MaintenancePolicy(
+            store,
+            MaintenanceConfig(
+                window_s=window,
+                plan_kw=dict(theta_add=0.3, theta_drop=0.15),
+                maintain_every_s=1.0,
+                maintain_cost_s=1e-4,
+            ),
+        )
+        ctl = AdmissionController(
+            store, AdmissionConfig(policy="adaptive"), policy=policy
+        )
+        client = StoreClient(ctl)
+        policy.request_flush()
+        for t, items, origin, prio, deadline in make_trace(
+            store, "bursty", n_req, seed=seed
+        ):
+            client.submit(items, origin, deadline_s=deadline, priority=prio, at=t)
+        ctl.run_until_idle()
+        text = export_chrome_trace(ctl.tracer)
+    finally:
+        set_default_registry(old)
+    names = [s.name for s in ctl.tracer.records]
+    summary = {
+        "n_spans": len(names),
+        "n_request_spans": names.count("request"),
+        "n_wave_spans": names.count("migration_wave"),
+        "n_waves_applied": policy.n_waves,
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, summary
 
 
 def run(fast: bool = True, smoke: bool = False) -> None:
@@ -164,6 +242,33 @@ def run(fast: bool = True, smoke: bool = False) -> None:
     results["accept_adaptive_beats_fixed_ge_2_regimes"] = bool(
         {"bursty", "steady"} <= set(wins)
     )
+
+    # telemetry-enabled run: nested request spans + migration-wave spans on
+    # the simulated clock, exported as Chrome trace-event JSON (Perfetto).
+    # Two identical runs must serialize byte-for-byte (sim-clock tracing is
+    # deterministic) — this is the observability PR's acceptance bar.
+    n_traced = 300 if smoke else n_req
+    text_a, trace_summary = run_traced(n_traced)
+    text_b, _ = run_traced(n_traced)
+    trace_summary["deterministic"] = text_a == text_b
+    assert trace_summary["deterministic"], (
+        "sim-clock trace export must be byte-identical across identical runs"
+    )
+    assert trace_summary["n_request_spans"] > 0
+    assert trace_summary["n_wave_spans"] > 0, (
+        "traced run landed no migration waves; widen churn or tighten window"
+    )
+    _TRACE_PATH.write_text(text_a + "\n")
+    trace_summary["file"] = _TRACE_PATH.name
+    results["trace"] = trace_summary
+    print(csv_row(
+        "sched_trace",
+        trace_summary["n_spans"],
+        f"requests={trace_summary['n_request_spans']};"
+        f"waves={trace_summary['n_wave_spans']};"
+        f"deterministic={trace_summary['deterministic']}",
+    ))
+
     if smoke:
         assert {"bursty", "steady"} <= set(wins), (
             "adaptive batching must beat the fixed-batch FIFO frontend on p99 "
@@ -171,7 +276,7 @@ def run(fast: bool = True, smoke: bool = False) -> None:
             + json.dumps({r: {p: row[p]["p99_s"] for p in _POLICIES}
                           for r, row in results["regimes"].items()})
         )
-        print("# smoke OK (JSON artifact not rewritten)")
+        print(f"# smoke OK (JSON artifact not rewritten; wrote {_TRACE_PATH.name})")
         return
     _JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
     print(f"# wrote {_JSON_PATH.name}")

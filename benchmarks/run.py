@@ -24,6 +24,7 @@ def main() -> None:
         bench_heterogeneity,
         bench_kernels,
         bench_migration,
+        bench_obs_overhead,
         bench_offline,
         bench_online,
         bench_optimality,
@@ -49,6 +50,7 @@ def main() -> None:
         "placement": bench_placement.run,
         "migration": bench_migration.run,
         "scheduler": bench_scheduler.run,
+        "obs": bench_obs_overhead.run,
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -26,11 +26,13 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import dhd
+from ..obs import get_registry
 from .cost import PlacementState
 from .graph import Graph
 from .latency import GeoEnvironment
@@ -251,6 +253,26 @@ class CompetitionArena:
         params: dhd.DHDParams,
         n_steps: int,
     ) -> Tuple[Optional[np.ndarray], np.ndarray]:
+        reg = get_registry()
+        if not reg.enabled:
+            return CompetitionArena._build_impl(
+                regions, g, candidates, params, n_steps
+            )
+        t0 = time.perf_counter()
+        out = CompetitionArena._build_impl(regions, g, candidates, params, n_steps)
+        reg.histogram("placement.arena_build_s").observe(time.perf_counter() - t0)
+        reg.counter("placement.arena_builds").inc()
+        reg.counter("placement.diffusion_candidates").inc(len(candidates))
+        return out
+
+    @staticmethod
+    def _build_impl(
+        regions: Sequence[OverlapRegion],
+        g: Graph,
+        candidates: List[Tuple[int, np.ndarray, List[np.ndarray]]],
+        params: dhd.DHDParams,
+        n_steps: int,
+    ) -> Tuple[Optional[np.ndarray], np.ndarray]:
         n_regions = len(regions)
         n_cand = len(candidates)
         valid = np.zeros(n_cand, dtype=bool)
@@ -435,6 +457,9 @@ def overlap_centric_placement(
     sizes = g.item_size()
     D = env.n_dcs
     state = PlacementState.empty(g.n_items, D)
+    # journal counters persist across placements; track this run's delta
+    j_hits0 = journal.hits if journal is not None else 0
+    j_miss0 = journal.misses if journal is not None else 0
 
     # primary copies: each vertex at its partition DC, each edge at src's DC
     state.delta[np.arange(g.n_nodes), g.partition] = True
@@ -625,6 +650,10 @@ def overlap_centric_placement(
 
     if journal is not None:
         stats["journal"] = journal.stats()
+        reg = get_registry()
+        if reg.enabled:
+            reg.counter("placement.journal_hits").inc(journal.hits - j_hits0)
+            reg.counter("placement.journal_misses").inc(journal.misses - j_miss0)
     if route:
         state.route_nearest(env)
     return state, stats

@@ -15,10 +15,12 @@ analytics (few sites, minimal WAN).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import get_registry
 from .cost import PlacementState
 from .graph import Graph
 from .latency import GeoEnvironment
@@ -31,6 +33,18 @@ __all__ = [
     "OfflineLayout",
     "route_offline",
 ]
+
+# precomputed per-layer tag keys: the 5% telemetry budget on the batch
+# serving path leaves no room for per-call tag normalization
+_LAYER_TAGS: Dict[int, Tuple[Tuple[str, str], ...]] = {}
+
+
+def _layer_tags(layer: int) -> Tuple[Tuple[str, str], ...]:
+    key = _LAYER_TAGS.get(layer)
+    if key is None:
+        key = (("layer", str(layer)),)
+        _LAYER_TAGS[layer] = key
+    return key
 
 
 # ------------------------------------------------------------------- online
@@ -152,15 +166,27 @@ def route_online_batch(
     delta_all = state.delta[items_all]  # [K, D]
     org_all = origin[req_id]
 
+    # coverage telemetry: per-layer resolved-item counters + expansion
+    # timing, all gated so the disabled path costs one attribute load
+    reg = get_registry()
+    obs = reg.enabled
+    if obs:
+        reg.counter_keyed("serving.requests", ()).inc(R)
+
     # Layer_0: local items first
     local = delta_all[ar_K, org_all]
     served[local] = org_all[local]
 
     missing_per_req = np.bincount(req_id[served < 0], minlength=R)
+    if obs:
+        unresolved = int(missing_per_req.sum())
+        reg.counter_keyed("routing.layer_hits", _layer_tags(0)).inc(K - unresolved)
     for layer in range(1, lg.n_layers + 1):
         active = missing_per_req > 0
         if not active.any():
             break
+        if obs:
+            t_layer = time.perf_counter()
         comp = lg.comp_of_dc[layer]  # [D]
         allowed = comp[origin][:, None] == comp[None, :]  # [R, D]
         allowed[ar_R, origin] = False
@@ -193,6 +219,21 @@ def route_online_batch(
             hit = miss & progress[req_id] & delta_all[ar_K, best[req_id]]
             served[hit] = best[req_id[hit]]
         missing_per_req = np.bincount(req_id[served < 0], minlength=R)
+        if obs:
+            # cumulative seconds as a counter (count comes from layer_hits'
+            # batch count): a scalar histogram observe costs ~10us in P²
+            # marker maths, which the 5% serving budget cannot spare
+            reg.counter_keyed("routing.layer_time_s", _layer_tags(layer)).inc(
+                time.perf_counter() - t_layer
+            )
+            now_unresolved = int(missing_per_req.sum())
+            reg.counter_keyed("routing.layer_hits", _layer_tags(layer)).inc(
+                unresolved - now_unresolved
+            )
+            unresolved = now_unresolved
+
+    if obs:
+        reg.counter_keyed("routing.unresolved_items", ()).inc(unresolved)
 
     # resolved latency per (request, DC): served bytes -> Eq. 1, vectorized
     srv = served >= 0
@@ -209,6 +250,25 @@ def route_online_batch(
     straggler[~served_mask.any(axis=1)] = 0.0
     wan_r = bytes_rd.sum(axis=1) - bytes_rd[ar_R, origin]
     n_miss = np.bincount(req_id[~srv], minlength=R) if (~srv).any() else np.zeros(R, np.int64)
+
+    if obs:
+        # serving-path telemetry, batch-granular: one sketch update for the
+        # whole latency vector and one [D, D] reduction for per-link WAN
+        # bytes (bytes_rd grouped by origin DC) — per-request Python here
+        # would blow the 5% overhead budget of BENCH_obs
+        # p50/p99 only: every tracked quantile is one more P² sketch fed per
+        # batch, and the p90 sketch does not earn its ~20us here
+        reg.histogram(
+            "serving.request_latency_s", quantiles=(0.5, 0.99)
+        ).observe_many(straggler)
+        wan_total = float(wan_r.sum())
+        reg.counter_keyed("serving.wan_bytes", ()).inc(wan_total)
+        if wan_total > 0.0:
+            onehot = np.zeros((R, D))
+            onehot[ar_R, origin] = 1.0
+            link = bytes_rd.T @ onehot  # [serving DC, origin DC] bytes
+            np.fill_diagonal(link, 0.0)  # local serving is not WAN traffic
+            reg.counter_grid("serving.wan_bytes_link", ("src", "dst")).add(link)
 
     # per-request materialization: all (r, dc) pairs at once, no np.unique
     rr, dd = np.nonzero(served_mask)  # row-major: grouped by request

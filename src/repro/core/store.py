@@ -14,6 +14,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import baselines
+from ..obs import Tracer, get_registry
 from .cost import CostBreakdown, PlacementState, check_constraints, total_cost
 from .graph import Graph, build_csr, grow_item_rows
 from .latency import GeoEnvironment
@@ -95,6 +96,8 @@ class GeoGraphStore:
         latency_interval_s: float = 0.100,
         seed: int = 0,
         compact_ratio: float = 0.30,
+        tracer: Optional[Tracer] = None,
+        registry=None,
     ) -> None:
         self.g = g
         self.env = env
@@ -103,6 +106,12 @@ class GeoGraphStore:
         self.placement_name = placement
         self.routing_name = routing
         self.compact_ratio = compact_ratio
+        # telemetry: wall-clock spans for data-plane work (the control plane
+        # runs its own sim-clock tracer — the two clock domains never mix in
+        # one export).  Default tracer/registry follow the process default:
+        # both short-circuit to no-ops until telemetry is enabled.
+        self.tracer = tracer if tracer is not None else Tracer(clock=time.perf_counter)
+        self._registry = registry
         self.route_index: Optional[RouteIndex] = None
         # content-stable uid per item row: assigned monotonically at birth,
         # row-selected (never renumbered) on compaction.  Placement-journal
@@ -122,26 +131,31 @@ class GeoGraphStore:
         # placement run, replayed by insert_patterns_incremental, remapped
         # in place across compaction, discarded on topology mutations
         self._placement_journal = self._fresh_journal()
-        t0 = time.perf_counter()
-        self.lg: LayeredGraph = build_layered_graph(
-            g, env, latency_interval_s=latency_interval_s
-        )
-        t1 = time.perf_counter()
-        self.state, pstats = self._place(placement, seed)
-        t2 = time.perf_counter()
-        self._apply_routing(routing, seed)
+        with self.tracer.span("store.build_layered_graph", track="store") as sp_build:
+            self.lg: LayeredGraph = build_layered_graph(
+                g, env, latency_interval_s=latency_interval_s
+            )
+        with self.tracer.span("store.place", track="store", strategy=placement) as sp_place:
+            self.state, pstats = self._place(placement, seed)
+        with self.tracer.span("store.route", track="store", strategy=routing):
+            self._apply_routing(routing, seed)
         self.caches = {
             d: HeatCache(g, d, self.state, self.config.dhd) for d in range(env.n_dcs)
         }
         self.stats = StoreStats(
             placement_stats=pstats,
-            build_time_s=t1 - t0,
-            placement_time_s=t2 - t1,
+            build_time_s=sp_build.elapsed_s(),
+            placement_time_s=sp_place.elapsed_s(),
         )
         # streaming-update state (lazily materialized on first apply_updates)
         self._delta_graph = None
         self._heat = None
         self._heat_scale = None
+
+    # ------------------------------------------------------------- telemetry
+    def _reg(self):
+        """Explicit registry if one was injected, else the process default."""
+        return self._registry if self._registry is not None else get_registry()
 
     # ------------------------------------------------------------ strategies
     def _fresh_journal(self) -> PlacementJournal:
@@ -221,10 +235,16 @@ class GeoGraphStore:
         for req, origin in requests:
             items = req.items if isinstance(req, Pattern) else np.asarray(req)
             norm.append((items, int(origin)))
-        if self.routing_name == "stepwise":
-            results = route_online_batch(self.lg, self.state, norm)
-        else:
-            results = [self._route_by_table(it, o) for it, o in norm]
+        with self.tracer.span("store.serve_batch", track="store", size=len(norm)):
+            if self.routing_name == "stepwise":
+                # serving.* counters/histograms are emitted batch-granular
+                # inside route_online_batch, where the flat arrays live
+                results = route_online_batch(self.lg, self.state, norm)
+            else:
+                results = [self._route_by_table(it, o) for it, o in norm]
+                reg = self._reg()
+                if reg.enabled and results:
+                    self._observe_serving(reg, norm, results)
         if observe and norm:
             # heat injection grouped per origin: one observe() per DC touched
             by_origin: Dict[int, List[np.ndarray]] = {}
@@ -233,6 +253,34 @@ class GeoGraphStore:
             for o, groups in by_origin.items():
                 self.caches[o].observe(np.concatenate(groups))
         return results
+
+    def _observe_serving(self, reg, norm, results: List[RouteResult]) -> None:
+        """Serving-path counters for the table-driven fallback strategies
+        (the stepwise hot path emits these vectorized inside
+        :func:`route_online_batch`).  Per-link bytes are reconstructed from
+        Eq. 1 — the route result already paid for ``per_dc_latency``, so
+        ``(lat - rtt) * bw`` recovers each serving DC's byte volume with
+        scalar math (no re-aggregation of the batch)."""
+        reg.counter("serving.requests").inc(len(results))
+        env = self.env
+        wan_total = 0.0
+        by_link: Dict[Tuple[int, int], float] = {}
+        for (_, origin), r in zip(norm, results):
+            wan_total += r.wan_bytes
+            if r.wan_bytes <= 0.0:
+                continue
+            for dc, lat in r.per_dc_latency.items():
+                if dc == origin:
+                    continue
+                nbytes = (lat - env.rtt_s[dc, origin]) * env.bw_Bps[dc, origin]
+                key = (dc, origin)
+                by_link[key] = by_link.get(key, 0.0) + nbytes
+        reg.counter("serving.wan_bytes").inc(wan_total)
+        for (src, dst), nbytes in by_link.items():
+            reg.counter("serving.wan_bytes_link", src=src, dst=dst).inc(nbytes)
+        lat_h = reg.histogram("serving.request_latency_s")
+        for r in results:
+            lat_h.observe(r.latency_s)
 
     def _route_by_table(self, items: np.ndarray, origin: int) -> RouteResult:
         sizes = self.g.item_size()
@@ -280,25 +328,26 @@ class GeoGraphStore:
         With a :class:`RouteIndex` the eviction refresh patches only the rows
         whose replica sets actually shrank; the legacy path re-derives the
         whole table."""
-        self._resync_route_index()
-        evicted = 0
-        # all per-DC caches share one topology -> ONE batched diffusion
-        step_heat_caches(list(self.caches.values()), n_steps=diffusion_steps)
-        for dc, cache in self.caches.items():
-            if evict:
-                ids = cache.evict()
-                evicted += len(ids)
-                if self.route_index is not None:
-                    self.route_index.drop_replicas(self.state.delta, ids, dc)
-        if self.route_index is None:
-            self.state.route_nearest(self.env)
-        residual = 0.0
-        if self._heat is not None and self._heat.heat is not None:
-            # budgeted apply_updates sweeps may leave the heat field short of
-            # equilibrium; the maintenance window pays that debt down
-            self._heat.solve()
-            residual = self._heat.residual
-        return {"evicted": evicted, "heat_residual": residual}
+        with self.tracer.span("store.maintain", track="store"):
+            self._resync_route_index()
+            evicted = 0
+            # all per-DC caches share one topology -> ONE batched diffusion
+            step_heat_caches(list(self.caches.values()), n_steps=diffusion_steps)
+            for dc, cache in self.caches.items():
+                if evict:
+                    ids = cache.evict()
+                    evicted += len(ids)
+                    if self.route_index is not None:
+                        self.route_index.drop_replicas(self.state.delta, ids, dc)
+            if self.route_index is None:
+                self.state.route_nearest(self.env)
+            residual = 0.0
+            if self._heat is not None and self._heat.heat is not None:
+                # budgeted apply_updates sweeps may leave the heat field short
+                # of equilibrium; the maintenance window pays that debt down
+                self._heat.solve()
+                residual = self._heat.residual
+            return {"evicted": evicted, "heat_residual": residual}
 
     def delete_items(self, item_ids: np.ndarray) -> None:
         """Bottom-up delete cleanup: drop all replicas everywhere (§V)."""
@@ -355,32 +404,41 @@ class GeoGraphStore:
         if self.placement_name != "geolayer" or self.routing_name != "stepwise":
             self.insert_patterns(new_patterns)
             return {"fallback": "full", "n_new": len(new_patterns)}
-        t0 = time.perf_counter()
-        self.workload = Workload.from_patterns(
-            list(self.workload.patterns) + list(new_patterns),
-            self.workload.n_items,
-            self.workload.n_dcs,
-        )
-        j = self._placement_journal
-        hits0, miss0 = j.hits, j.misses
-        new_state, pstats = self._place(self.placement_name, seed=0, route=False)
-        changed = np.where((new_state.delta != self.state.delta).any(axis=1))[0]
-        self.state.delta[changed] = new_state.delta[changed]
-        if self.route_index is not None:
-            self._resync_route_index()
-            self.route_index.patch_rows(self.state.delta, changed)
-        else:
-            from ..streaming.migration import _reroute_items
+        with self.tracer.span(
+            "store.insert_patterns_incremental", track="store",
+            n_new=len(new_patterns),
+        ) as root:
+            self.workload = Workload.from_patterns(
+                list(self.workload.patterns) + list(new_patterns),
+                self.workload.n_items,
+                self.workload.n_dcs,
+            )
+            j = self._placement_journal
+            hits0, miss0 = j.hits, j.misses
+            with self.tracer.span("store.replay_placement", track="store"):
+                new_state, pstats = self._place(
+                    self.placement_name, seed=0, route=False
+                )
+            changed = np.where((new_state.delta != self.state.delta).any(axis=1))[0]
+            self.state.delta[changed] = new_state.delta[changed]
+            with self.tracer.span(
+                "store.patch_routes", track="store", rows=int(len(changed))
+            ):
+                if self.route_index is not None:
+                    self._resync_route_index()
+                    self.route_index.patch_rows(self.state.delta, changed)
+                else:
+                    from ..streaming.migration import _reroute_items
 
-            _reroute_items(self.state, self.env, changed)
-        self.stats.placement_stats = pstats
-        return {
-            "n_new": len(new_patterns),
-            "rows_changed": int(len(changed)),
-            "journal_hits": j.hits - hits0,
-            "journal_misses": j.misses - miss0,
-            "apply_time_s": time.perf_counter() - t0,
-        }
+                    _reroute_items(self.state, self.env, changed)
+            self.stats.placement_stats = pstats
+            return {
+                "n_new": len(new_patterns),
+                "rows_changed": int(len(changed)),
+                "journal_hits": j.hits - hits0,
+                "journal_misses": j.misses - miss0,
+                "apply_time_s": root.elapsed_s(),
+            }
 
     # ---------------------------------------------------- streaming updates
     def _heat_inputs(self):
@@ -422,17 +480,25 @@ class GeoGraphStore:
         equilibrium.  Replica migration is deferred to
         :meth:`flush_migrations` so bursts of batches amortize one move-set.
         """
+        root = self.tracer.span(
+            "store.apply_updates", track="store", n_ops=int(batch.n_ops)
+        )
+        try:
+            return self._apply_updates_traced(batch, root)
+        finally:
+            root.end()
+
+    def _apply_updates_traced(self, batch, root) -> UpdateReport:
         from ..streaming.delta_dhd import StreamingHeat
         from ..streaming.migration import _reroute_items
         from ..streaming.mutation_log import DeltaGraph
 
-        t0 = time.perf_counter()
         self._resync_route_index()
         if self._delta_graph is None:
             self._delta_graph = DeltaGraph(self.g)
         dg = self._delta_graph
         if batch.n_ops == 0:  # no-op batch: skip repair/heat entirely
-            return UpdateReport(0, 0, 0, 0, 0, None, None, time.perf_counter() - t0)
+            return UpdateReport(0, 0, 0, 0, 0, None, None, root.elapsed_s())
         # mutations change the edge topology -> journaled region adjacency
         # and heat tables die (the id shift alone would be survivable now
         # that fingerprints run over uids, but the topology change is not)
@@ -474,7 +540,8 @@ class GeoGraphStore:
         self.g = g2
 
         # --- incremental layered-graph repair ----------------------------
-        self.lg, rstats = repair_layered_graph(self.lg, g2, dg.edge_alive)
+        with self.tracer.span("store.repair_layers", track="store"):
+            self.lg, rstats = repair_layered_graph(self.lg, g2, dg.edge_alive)
 
         # --- primaries for new items, bottom-up delete cleanup -----------
         if nv:
@@ -490,15 +557,19 @@ class GeoGraphStore:
 
         # --- reroute only the rows whose replica sets changed -------------
         changed = np.unique(np.concatenate([res.new_item_ids(g2.n_nodes), dead_items]))
-        if self.route_index is not None:
-            # the index grows its own rows (edge block shifts by nv), clears
-            # the tombstoned ones and derives exactly the changed rows
-            self.route_index.apply_batch(
-                self.state.delta, old_n, nv, ne, changed, dead_items
-            )
-            self.state.route = self.route_index.nearest
-        else:
-            _reroute_items(self.state, self.env, changed)
+        with self.tracer.span(
+            "store.reroute", track="store", rows=int(len(changed))
+        ):
+            if self.route_index is not None:
+                # the index grows its own rows (edge block shifts by nv),
+                # clears the tombstoned ones and derives exactly the changed
+                # rows
+                self.route_index.apply_batch(
+                    self.state.delta, old_n, nv, ne, changed, dead_items
+                )
+                self.state.route = self.route_index.nearest
+            else:
+                _reroute_items(self.state, self.env, changed)
 
         # --- warm-start DHD over the alive topology -----------------------
         # Migration planning only *ranks* items by heat, so the store runs a
@@ -509,10 +580,11 @@ class GeoGraphStore:
         if self._heat is None:
             self._heat = StreamingHeat(tol=1e-5, max_iters=32)
         alive_e, w_e, q = self._heat_inputs()
-        hstats = self._heat.update(
-            g2.n_nodes, g2.src[alive_e], g2.dst[alive_e], w_e, q,
-            touched=res.touched_vertices,
-        )
+        with self.tracer.span("store.warm_heat", track="store"):
+            hstats = self._heat.update(
+                g2.n_nodes, g2.src[alive_e], g2.dst[alive_e], w_e, q,
+                touched=res.touched_vertices,
+            )
 
         # --- notify raw-row holders of the id-space shift -----------------
         # Vertex inserts shift every edge-item row by nv; queued request
@@ -544,7 +616,7 @@ class GeoGraphStore:
             n_touched_vertices=len(res.touched_vertices),
             repair=rstats,
             heat=hstats,
-            apply_time_s=time.perf_counter() - t0,
+            apply_time_s=root.elapsed_s(),
             compacted=compacted,
         )
 
@@ -606,6 +678,14 @@ class GeoGraphStore:
         ids, so the stable-id repair path does not apply) and a fresh
         :class:`~repro.streaming.DeltaGraph` takes over with zero tombstones.
         """
+        sp = self.tracer.span(
+            "store.compact", track="store",
+            tombstone_ratio=round(self.tombstone_ratio(), 4),
+        )
+        with sp:
+            self._compact_in_place_traced()
+
+    def _compact_in_place_traced(self) -> None:
         dg = self._delta_graph
         old_n = self.g.n_nodes
         gc, vmap, emap = dg.compact()
@@ -687,14 +767,18 @@ class GeoGraphStore:
         (``schedule`` picks the packing: ``"ff"`` priority-order first-fit,
         ``"lpt"`` makespan-aware).  Pure planning: the placement, route
         index and heat state are read, never written."""
-        from ..streaming.delta_dhd import StreamingHeat
-        from ..streaming.migration import plan_migrations, schedule_transfers
-
         if schedule not in ("ff", "lpt"):
             # validated here too: with window_s=None schedule_transfers (the
             # authority on packing names) never runs, and a typo'd packing
             # request must not silently single-shot instead
             raise ValueError(f"unknown packing {schedule!r} (want 'ff' or 'lpt')")
+        with self.tracer.span("store.plan_flush", track="store"):
+            return self._plan_flush_traced(budget_bytes, window_s, schedule, **kw)
+
+    def _plan_flush_traced(self, budget_bytes, window_s, schedule, **kw):
+        from ..streaming.delta_dhd import StreamingHeat
+        from ..streaming.migration import plan_migrations, schedule_transfers
+
         self._resync_route_index()
         sizes = self.g.item_size()
         if budget_bytes is None:

@@ -8,6 +8,7 @@ validation.  ``use_kernel`` can be pinned explicitly by callers/tests.
 from __future__ import annotations
 
 import functools
+import time
 from collections import OrderedDict
 from typing import Optional, Tuple
 
@@ -16,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
+from ..obs import get_registry
 from .dhd_spmv import dhd_ell_step, dhd_ell_step_batch
 from .embedding_bag import embedding_bag as _embedding_bag_kernel
 from .flash_attention import flash_attention as _flash_attention_kernel
@@ -26,8 +28,23 @@ __all__ = [
     "dhd_step_batch",
     "diffuse_batch",
     "bag_lookup",
+    "edge_cache_stats",
     "on_tpu",
 ]
+
+
+# ------------------------------------------------------- dispatch telemetry
+def _obs_t0() -> Optional[float]:
+    """perf_counter() when telemetry is on, else None (zero-cost gate)."""
+    return time.perf_counter() if get_registry().enabled else None
+
+
+def _obs_dispatch(op: str, path: str, t0: Optional[float]) -> None:
+    if t0 is None:
+        return
+    reg = get_registry()
+    reg.counter("kernels.dispatch", op=op, path=path).inc()
+    reg.histogram("kernels.op_time_s", op=op).observe(time.perf_counter() - t0)
 
 
 def on_tpu() -> bool:
@@ -105,7 +122,24 @@ def attention(
 # the identity key would serve the pre-mutation edge list.
 _EDGE_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
 _EDGE_CACHE_MAX = 8
-_EDGE_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def edge_cache_stats() -> dict:
+    """Edge-cache hit/miss counts from the process-default registry.
+
+    Counts live in the registry (so ``registry.reset()`` clears them
+    between benchmark runs); a disabled registry reports zeros."""
+    reg = get_registry()
+    hits = reg.counter("kernels.edge_cache", event="hit").value
+    misses = reg.counter("kernels.edge_cache", event="miss").value
+    hits = 0.0 if hits != hits else hits  # NaN from the no-op singleton
+    misses = 0.0 if misses != misses else misses
+    total = hits + misses
+    return {
+        "hits": int(hits),
+        "misses": int(misses),
+        "hit_rate": hits / total if total else 0.0,
+    }
 
 
 def _tail_edges(
@@ -118,7 +152,7 @@ def _tail_edges(
     hit = _EDGE_CACHE.get(key)
     if hit is not None:
         _EDGE_CACHE.move_to_end(key)
-        _EDGE_CACHE_STATS["hits"] += 1
+        get_registry().counter("kernels.edge_cache", event="hit").inc()
         return hit[1]
     cols_np, vals_np = np.asarray(cols), np.asarray(vals)
     iu, ik = np.nonzero(vals_np > 0)
@@ -134,7 +168,7 @@ def _tail_edges(
         jnp.asarray(e_w[first], jnp.float32),
     )
     _EDGE_CACHE[key] = ((cols, vals, tail_src, tail_dst, tail_val), out)
-    _EDGE_CACHE_STATS["misses"] += 1
+    get_registry().counter("kernels.edge_cache", event="miss").inc()
     while len(_EDGE_CACHE) > _EDGE_CACHE_MAX:
         _EDGE_CACHE.popitem(last=False)
     return out
@@ -165,6 +199,7 @@ def dhd_step(
     """
     if use_kernel is None:
         use_kernel = on_tpu()
+    t0 = _obs_t0()
     has_tail = tail_src is not None and tail_src.size > 0
     if has_tail:
         # Tail edges change |N_u^out| globally, so the blocked kernel cannot
@@ -174,15 +209,21 @@ def dhd_step(
         a, b, w = _tail_edges(n, cols, vals, tail_src, tail_dst, tail_val)
         from ..core.dhd import dhd_step_edges
 
-        return dhd_step_edges(
+        out = dhd_step_edges(
             heat, a, b, w, q, n, alpha=alpha, gamma=gamma, beta=beta
         )
+        _obs_dispatch("dhd_step", "tail_edges", t0)
+        return out
     if use_kernel:
-        return dhd_ell_step(
+        out = dhd_ell_step(
             heat, cols, vals, q, alpha=alpha, gamma=gamma, beta=beta,
             block_n=min(block_n, heat.shape[0]), interpret=not on_tpu(),
         )
-    return ref.dhd_ell_ref(heat, cols, vals, q, alpha=alpha, gamma=gamma, beta=beta)
+        _obs_dispatch("dhd_step", "kernel", t0)
+        return out
+    out = ref.dhd_ell_ref(heat, cols, vals, q, alpha=alpha, gamma=gamma, beta=beta)
+    _obs_dispatch("dhd_step", "ref", t0)
+    return out
 
 
 def dhd_step_batch(
@@ -207,6 +248,7 @@ def dhd_step_batch(
     a per-adjacency operation)."""
     if use_kernel is None:
         use_kernel = on_tpu()
+    t0 = _obs_t0()
     has_tail = tail_src is not None and tail_src.size > 0
     if has_tail:
         if vals.ndim == 3:
@@ -215,17 +257,23 @@ def dhd_step_batch(
         a, b, w = _tail_edges(n, cols, vals, tail_src, tail_dst, tail_val)
         from ..core.dhd import dhd_step_edges_batch
 
-        return dhd_step_edges_batch(
+        out = dhd_step_edges_batch(
             heat, a, b, w, q, n, alpha=alpha, gamma=gamma, beta=beta
         )
+        _obs_dispatch("dhd_step_batch", "tail_edges", t0)
+        return out
     if use_kernel:
-        return dhd_ell_step_batch(
+        out = dhd_ell_step_batch(
             heat, cols, vals, q, alpha=alpha, gamma=gamma, beta=beta,
             block_n=min(block_n, heat.shape[1]), interpret=not on_tpu(),
         )
-    return ref.dhd_ell_ref_batch(
+        _obs_dispatch("dhd_step_batch", "kernel", t0)
+        return out
+    out = ref.dhd_ell_ref_batch(
         heat, cols, vals, q, alpha=alpha, gamma=gamma, beta=beta
     )
+    _obs_dispatch("dhd_step_batch", "ref", t0)
+    return out
 
 
 # --------------------------------------------------- batched diffusion loop
@@ -329,6 +377,7 @@ def diffuse_batch(
     else:
         h0 = seeds_j + jnp.asarray(np.atleast_2d(base_heat), jnp.float32)
     half_life = max(n_steps / 4.0, 1.0)
+    t0 = _obs_t0()
     if use_kernel:
         cols, vals = _ell_pack_batch(n_nodes, src, dst, weight)
         h = _diffuse_ell_loop(
@@ -337,6 +386,7 @@ def diffuse_batch(
             half_life=half_life, block_n=min(block_n, n_nodes),
             interpret=not on_tpu(),
         )
+        _obs_dispatch("diffuse_batch", "kernel", t0)
     else:
         w = np.asarray(weight, np.float32)
         h = _diffuse_edges_loop(
@@ -345,6 +395,7 @@ def diffuse_batch(
             n_nodes=n_nodes, n_steps=n_steps,
             alpha=p.alpha, gamma=p.gamma, beta=p.beta, half_life=half_life,
         )
+        _obs_dispatch("diffuse_batch", "ref", t0)
     return np.asarray(h)
 
 

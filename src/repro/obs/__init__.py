@@ -1,0 +1,45 @@
+"""Telemetry subsystem: metrics registry, span tracer, exporters.
+
+No dependencies beyond the stdlib and numpy (already required by every
+plane — serving, placement, migration, kernels), so importing it never
+touches jax import paths.
+
+Quick start::
+
+    from repro.obs import get_registry, Tracer, export_chrome_trace
+
+    get_registry().enable()
+    store = GeoGraphStore(g, env, workload)   # picks up default registry
+    ... run work ...
+    print(text_dashboard(get_registry(), store.tracer))
+    export_chrome_trace(store.tracer, "store.trace.json")
+"""
+
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MatrixCounter,
+    MetricsRegistry,
+    P2Quantile,
+    get_registry,
+    set_default_registry,
+)
+from .trace import Span, SpanRecord, Tracer
+from .export import export_chrome_trace, text_dashboard
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MatrixCounter",
+    "MetricsRegistry",
+    "P2Quantile",
+    "Span",
+    "SpanRecord",
+    "Tracer",
+    "export_chrome_trace",
+    "get_registry",
+    "set_default_registry",
+    "text_dashboard",
+]

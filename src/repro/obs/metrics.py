@@ -1,0 +1,520 @@
+"""Metrics registry (stdlib + numpy only): counters, gauges, and streaming
+quantile histograms.
+
+Everything here is bounded-memory by construction.  Histograms use the
+P-squared (P²) streaming-quantile sketch of Jain & Chlamtac (1985): five
+markers per tracked quantile, adjusted with a parabolic (fallback linear)
+update on every observation.  No sample list is ever kept, so a histogram
+costs O(1) memory no matter how many values it absorbs.
+
+The process-default registry starts *disabled*: every instrument handed
+out by a disabled registry is a shared no-op singleton, so instrumented
+hot paths cost one attribute load and a branch.  Components that want
+telemetry either flip the default registry on (``get_registry().enable()``)
+or install their own via :func:`set_default_registry`.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import threading
+from typing import Dict, Iterable, Mapping, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MatrixCounter",
+    "MetricsRegistry",
+    "P2Quantile",
+    "get_registry",
+    "set_default_registry",
+]
+
+TagKey = Tuple[Tuple[str, str], ...]
+
+
+def _tag_key(tags: Mapping[str, object]) -> TagKey:
+    return tuple(sorted((k, str(v)) for k, v in tags.items()))
+
+
+class P2Quantile:
+    """P² streaming estimator for a single quantile ``q`` (0 < q < 1).
+
+    Keeps 5 marker heights/positions; after 5 observations each ``add``
+    is O(1).  Estimates are exact until the 5th sample, then converge to
+    the true quantile as the stream grows.
+    """
+
+    __slots__ = ("q", "n", "_heights", "_pos", "_want", "_dwant")
+
+    # max settle passes per add_many batch (see the comment there)
+    SETTLE_PASSES = 2
+
+    def __init__(self, q: float):
+        if not 0.0 < q < 1.0:
+            raise ValueError(f"quantile must be in (0, 1), got {q}")
+        self.q = q
+        self.n = 0
+        self._heights: list = []
+        self._pos = [1.0, 2.0, 3.0, 4.0, 5.0]
+        self._want = [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0]
+        self._dwant = [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0]
+
+    def add(self, x: float) -> None:
+        self.n += 1
+        h = self._heights
+        if len(h) < 5:
+            h.append(x)
+            h.sort()
+            return
+        # locate the cell containing x, clamping the extreme markers
+        if x < h[0]:
+            h[0] = x
+            k = 0
+        elif x >= h[4]:
+            h[4] = x
+            k = 3
+        else:
+            k = 0
+            while x >= h[k + 1]:
+                k += 1
+        pos = self._pos
+        for i in range(k + 1, 5):
+            pos[i] += 1.0
+        want = self._want
+        for i in range(5):
+            want[i] += self._dwant[i]
+        # nudge interior markers toward their desired positions
+        self._nudge(1)
+        self._nudge(2)
+        self._nudge(3)
+
+    def add_many(self, sorted_values) -> None:
+        """Absorb a pre-sorted batch in one pass (batch-P²).
+
+        Marker positions advance by per-batch rank counts (one searchsorted
+        across the markers) instead of once per observation, then the
+        interior heights are nudged toward their desired positions with the
+        usual parabolic/linear steps, iterated until the markers settle.
+        Statistically this matches scalar P² — both are O(1)-memory
+        approximations whose error vanishes as the stream grows — at a
+        per-batch cost that no longer scales with the batch size.
+        """
+        m = len(sorted_values)
+        if m == 0:
+            return
+        h = self._heights
+        if len(h) < 5:
+            if self.n == 0 and m >= 5:
+                # markers placed straight at their desired ranks — feeding
+                # the 5 *smallest* values instead (the batch is sorted!)
+                # would pin the low markers at the distribution floor with
+                # unit position gaps, deadlocking every later adjustment
+                self._init_from_sorted(sorted_values)
+            else:
+                for v in sorted_values:
+                    self.add(float(v))
+            return
+        vals = sorted_values
+        self.n += m
+        lo, hi = float(vals[0]), float(vals[-1])
+        if lo < h[0]:
+            h[0] = lo
+        if hi >= h[4]:
+            h[4] = hi
+        # interior markers advance by their batch rank (#values strictly
+        # below, matching the scalar cell search); the max marker absorbs
+        # every observation
+        below = np.searchsorted(vals, h[1:4], side="left")
+        pos = self._pos
+        pos[1] += float(below[0])
+        pos[2] += float(below[1])
+        pos[3] += float(below[2])
+        pos[4] += float(m)
+        want = self._want
+        dwant = self._dwant
+        for i in range(1, 5):
+            want[i] += m * dwant[i]
+        # settle: each pass moves an out-of-place marker one position.  The
+        # pass count is capped — heavily tied streams (discrete latency
+        # values) otherwise make markers chase their desired rank for ~m
+        # passes per batch.  Residual want-pos deviation is zero-mean and
+        # carries over, so later batches absorb it; the height estimate
+        # oscillates inside the tie neighbourhood, which is the correct
+        # quantile there anyway.
+        for _ in range(min(m, self.SETTLE_PASSES)):
+            moved = self._nudge(1)
+            moved |= self._nudge(2)
+            moved |= self._nudge(3)
+            if not moved:
+                break
+
+    def _init_from_sorted(self, vals) -> None:
+        """Seed all five markers from one sorted batch: heights at the
+        desired rank positions, which is the fixed point scalar P² converges
+        toward for a stream with this empirical distribution."""
+        m = len(vals)
+        q = self.q
+        self.n = m
+        pos = [
+            1.0,
+            1.0 + (m - 1) * q / 2.0,
+            1.0 + (m - 1) * q,
+            1.0 + (m - 1) * (1.0 + q) / 2.0,
+            float(m),
+        ]
+        self._pos = list(pos)
+        self._want = list(pos)
+        self._heights = [float(vals[int(round(p)) - 1]) for p in pos]
+
+    def _nudge(self, i: int) -> bool:
+        h, pos, want = self._heights, self._pos, self._want
+        d = want[i] - pos[i]
+        if (d >= 1.0 and pos[i + 1] - pos[i] > 1.0) or (
+            d <= -1.0 and pos[i - 1] - pos[i] < -1.0
+        ):
+            d = 1.0 if d > 0 else -1.0
+            hp = self._parabolic(i, d)
+            if h[i - 1] < hp < h[i + 1]:
+                h[i] = hp
+            else:  # parabolic step would cross a neighbour: go linear
+                j = i + int(d)
+                h[i] = h[i] + d * (h[j] - h[i]) / (pos[j] - pos[i])
+            pos[i] += d
+            return True
+        return False
+
+    def _parabolic(self, i: int, d: float) -> float:
+        h, pos = self._heights, self._pos
+        return h[i] + d / (pos[i + 1] - pos[i - 1]) * (
+            (pos[i] - pos[i - 1] + d) * (h[i + 1] - h[i]) / (pos[i + 1] - pos[i])
+            + (pos[i + 1] - pos[i] - d) * (h[i] - h[i - 1]) / (pos[i] - pos[i - 1])
+        )
+
+    def value(self) -> float:
+        h = self._heights
+        if not h:
+            return math.nan
+        if len(h) < 5 or self.n <= 5:
+            # exact small-sample quantile (nearest-rank interpolation)
+            idx = self.q * (len(h) - 1)
+            lo = int(idx)
+            hi = min(lo + 1, len(h) - 1)
+            return h[lo] + (idx - lo) * (h[hi] - h[lo])
+        return h[2]
+
+
+class Counter:
+    """Monotonic counter."""
+
+    __slots__ = ("name", "tags", "value")
+
+    def __init__(self, name: str, tags: TagKey = ()):
+        self.name = name
+        self.tags = tags
+        self.value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        self.value += amount
+
+    def snapshot(self) -> dict:
+        return {"type": "counter", "value": self.value}
+
+    def reset(self) -> None:
+        self.value = 0.0
+
+
+class Gauge:
+    """Last-write-wins scalar."""
+
+    __slots__ = ("name", "tags", "value")
+
+    def __init__(self, name: str, tags: TagKey = ()):
+        self.name = name
+        self.tags = tags
+        self.value = math.nan
+
+    def set(self, value: float) -> None:
+        self.value = float(value)
+
+    def snapshot(self) -> dict:
+        return {"type": "gauge", "value": self.value}
+
+    def reset(self) -> None:
+        self.value = math.nan
+
+
+class Histogram:
+    """Streaming histogram: count/sum/min/max plus P² quantile sketches."""
+
+    __slots__ = ("name", "tags", "quantiles", "count", "sum", "min", "max", "_sketches")
+
+    DEFAULT_QUANTILES = (0.5, 0.9, 0.99)
+
+    def __init__(
+        self,
+        name: str,
+        tags: TagKey = (),
+        quantiles: Iterable[float] = DEFAULT_QUANTILES,
+    ):
+        self.name = name
+        self.tags = tags
+        self.quantiles = tuple(quantiles)
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+        self._sketches = [P2Quantile(q) for q in self.quantiles]
+
+    def observe(self, value: float) -> None:
+        value = float(value)
+        self.count += 1
+        self.sum += value
+        if value < self.min:
+            self.min = value
+        if value > self.max:
+            self.max = value
+        for s in self._sketches:
+            s.add(value)
+
+    def observe_many(self, values) -> None:
+        """Vectorized :meth:`observe` for a whole batch: one shared sort
+        feeds every sketch's batch-P² update, so serving paths can record
+        hundreds of latencies per call without per-value Python work."""
+        vals = np.asarray(values, dtype=float)
+        m = int(vals.size)
+        if m == 0:
+            return
+        if m == 1:
+            self.observe(float(vals[0]))
+            return
+        vals = np.sort(vals, axis=None)
+        self.count += m
+        self.sum += float(vals.sum())
+        if vals[0] < self.min:
+            self.min = float(vals[0])
+        if vals[-1] > self.max:
+            self.max = float(vals[-1])
+        for s in self._sketches:
+            s.add_many(vals)
+
+    def quantile(self, q: float) -> float:
+        for s in self._sketches:
+            if s.q == q:
+                return s.value()
+        raise KeyError(f"quantile {q} not tracked by {self.name}")
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else math.nan
+
+    def snapshot(self) -> dict:
+        return {
+            "type": "histogram",
+            "count": self.count,
+            "sum": self.sum,
+            "mean": self.mean,
+            "min": self.min if self.count else math.nan,
+            "max": self.max if self.count else math.nan,
+            "quantiles": {f"p{q * 100:g}": s.value() for q, s in zip(self.quantiles, self._sketches)},
+        }
+
+    def reset(self) -> None:
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+        self._sketches = [P2Quantile(q) for q in self.quantiles]
+
+
+class MatrixCounter:
+    """2-D grid of counters addressed by integer tag pairs.
+
+    Hot paths that account a whole ``[n, m]`` matrix per batch (per-link WAN
+    bytes keyed ``(src DC, dst DC)``) pay one numpy add instead of one
+    registry lookup per cell.  :meth:`MetricsRegistry.snapshot` expands the
+    nonzero cells into ordinary per-cell counter entries, so consumers see
+    the same shape as individually tagged counters.
+    """
+
+    __slots__ = ("name", "tags", "axes", "value")
+
+    def __init__(self, name: str, tags: TagKey = (), axes: Tuple[str, str] = ("i", "j")):
+        self.name = name
+        self.tags = tags
+        self.axes = axes
+        self.value = np.zeros((0, 0))
+
+    def add(self, mat) -> None:
+        mat = np.asarray(mat, dtype=float)
+        if mat.shape != self.value.shape:
+            grown = np.zeros(
+                (
+                    max(mat.shape[0], self.value.shape[0]),
+                    max(mat.shape[1], self.value.shape[1]),
+                )
+            )
+            grown[: self.value.shape[0], : self.value.shape[1]] = self.value
+            self.value = grown
+        self.value[: mat.shape[0], : mat.shape[1]] += mat
+
+    def cells(self):
+        """Yield ``(tag_repr, counter_snapshot)`` for every nonzero cell."""
+        ai, aj = self.axes
+        for i, j in zip(*(a.tolist() for a in np.nonzero(self.value))):
+            yield f"{ai}={i},{aj}={j}", {
+                "type": "counter",
+                "value": float(self.value[i, j]),
+            }
+
+    def snapshot(self) -> dict:
+        return {"type": "counter_grid", "cells": dict(self.cells())}
+
+    def reset(self) -> None:
+        self.value = np.zeros((0, 0))
+
+
+class _NoopInstrument:
+    """Shared do-nothing stand-in handed out by a disabled registry."""
+
+    __slots__ = ()
+
+    def inc(self, amount: float = 1.0) -> None:
+        pass
+
+    def set(self, value: float) -> None:
+        pass
+
+    def observe(self, value: float) -> None:
+        pass
+
+    def observe_many(self, values) -> None:
+        pass
+
+    def add(self, mat) -> None:
+        pass
+
+    value = math.nan
+    count = 0
+    sum = 0.0
+
+    def quantile(self, q: float) -> float:
+        return math.nan
+
+
+_NOOP = _NoopInstrument()
+
+
+class MetricsRegistry:
+    """Keyed store of instruments.
+
+    Instruments are keyed on ``(name, sorted tags)``; asking twice for the
+    same key returns the same object.  A disabled registry hands out a
+    shared no-op singleton instead, so call sites never branch themselves.
+    """
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._lock = threading.Lock()
+        self._instruments: Dict[Tuple[str, TagKey], object] = {}
+
+    # -- lifecycle ---------------------------------------------------------
+    def enable(self) -> "MetricsRegistry":
+        self.enabled = True
+        return self
+
+    def disable(self) -> "MetricsRegistry":
+        self.enabled = False
+        return self
+
+    def reset(self) -> None:
+        with self._lock:
+            for inst in self._instruments.values():
+                inst.reset()
+
+    def clear(self) -> None:
+        with self._lock:
+            self._instruments.clear()
+
+    # -- instrument accessors ---------------------------------------------
+    def _get_keyed(self, cls, name: str, key: TagKey, **kw):
+        if not self.enabled:
+            return _NOOP
+        k = (name, key)
+        inst = self._instruments.get(k)
+        if inst is None:
+            with self._lock:
+                inst = self._instruments.get(k)
+                if inst is None:
+                    inst = cls(name, key, **kw)
+                    self._instruments[k] = inst
+        return inst
+
+    def _get(self, cls, name: str, tags: Mapping[str, object], **kw):
+        return self._get_keyed(cls, name, _tag_key(tags), **kw)
+
+    def counter(self, name: str, **tags) -> Counter:
+        return self._get(Counter, name, tags)
+
+    def counter_keyed(self, name: str, key: TagKey) -> Counter:
+        """Hot-path :meth:`counter`: takes the already-normalized tag key
+        (the ``tuple(sorted((k, str(v))))`` form), skipping per-call tag
+        sorting/stringification — for call sites that cache their keys."""
+        return self._get_keyed(Counter, name, key)
+
+    def counter_grid(self, name: str, axes: Tuple[str, str]) -> MatrixCounter:
+        """Grid of counters over two integer-valued tag axes; one
+        :meth:`MatrixCounter.add` accounts a whole matrix per batch."""
+        return self._get_keyed(MatrixCounter, name, (), axes=axes)
+
+    def gauge(self, name: str, **tags) -> Gauge:
+        return self._get(Gauge, name, tags)
+
+    def histogram(
+        self,
+        name: str,
+        quantiles: Iterable[float] = Histogram.DEFAULT_QUANTILES,
+        **tags,
+    ) -> Histogram:
+        return self._get(Histogram, name, tags, quantiles=quantiles)
+
+    # -- export ------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Nested-dict view: ``{name: {tag_repr: instrument_snapshot}}``."""
+        out: Dict[str, dict] = {}
+        with self._lock:
+            items = sorted(self._instruments.items())
+        for (name, tags), inst in items:
+            if isinstance(inst, MatrixCounter):
+                out.setdefault(name, {}).update(inst.cells())
+                continue
+            tag_repr = ",".join(f"{k}={v}" for k, v in tags) or "-"
+            out.setdefault(name, {})[tag_repr] = inst.snapshot()
+        return out
+
+    def to_json(self, path: Optional[str] = None, indent: int = 2) -> str:
+        text = json.dumps(self.snapshot(), indent=indent, sort_keys=True, default=str)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text + "\n")
+        return text
+
+
+_default_registry = MetricsRegistry(enabled=False)
+
+
+def get_registry() -> MetricsRegistry:
+    """The process-default registry (starts disabled)."""
+    return _default_registry
+
+
+def set_default_registry(registry: MetricsRegistry) -> MetricsRegistry:
+    """Install ``registry`` as the process default; returns the previous one."""
+    global _default_registry
+    old = _default_registry
+    _default_registry = registry
+    return old

@@ -68,10 +68,17 @@ class MaintenancePolicy:
         store,
         config: Optional[MaintenanceConfig] = None,
         measure_wave: Optional[Callable[[object], float]] = None,
+        tracer=None,
+        registry=None,
     ) -> None:
         self.store = store
         self.cfg = config or MaintenanceConfig()
         self.measure_wave = measure_wave
+        # an AdmissionController adopting this policy shares its sim-clock
+        # tracer (so wave spans land on the serving timeline); standalone
+        # users may inject their own
+        self.tracer = tracer
+        self._registry = registry
         self.window_gain = 1.0  # EWMA of estimated / measured wave makespan
         # ring-buffered like the controller's telemetry: the policy is
         # long-lived and periodic flushes would grow these without bound
@@ -102,6 +109,47 @@ class MaintenancePolicy:
     def effective_window(self) -> float:
         """Measurement-corrected transfer window for the *next* schedule."""
         return self.cfg.window_s * self.window_gain
+
+    def _reg(self):
+        from ..obs import get_registry
+
+        return self._registry if self._registry is not None else get_registry()
+
+    def _trace_wave(self, t0: float, wave, measured_s: float) -> None:
+        """Span + per-link byte telemetry for one applied transfer wave.
+
+        ``t0`` is the simulated start (the idle-gap cursor), so wave spans
+        interleave correctly with the controller's request spans when both
+        share the sim-clock tracer."""
+        tr = self.tracer
+        traced = tr is not None and tr.enabled
+        reg = self._reg()
+        if not traced and not reg.enabled:
+            return
+        env = self.store.env
+        t1 = t0 + measured_s
+        root = None
+        if traced:
+            root = tr.record(
+                "migration_wave", t0, t1, track="maintenance",
+                wave=wave.index, nbytes=int(wave.nbytes),
+                n_links=len(wave.links),
+                est_makespan_s=round(wave.makespan_s, 6),
+            )
+        for b in wave.links:
+            if reg.enabled:
+                reg.counter("migration.wan_bytes", src=b.src, dst=b.dst).inc(
+                    b.nbytes
+                )
+            if traced:
+                est = b.nbytes / env.bw_Bps[b.src, b.dst] + env.rtt_s[b.src, b.dst]
+                tr.record(
+                    "link_transfer", t0, min(t0 + est, t1), track="maintenance",
+                    parent=root, src=b.src, dst=b.dst, nbytes=int(b.nbytes),
+                )
+        if reg.enabled:
+            reg.histogram("migration.wave_makespan_s").observe(measured_s)
+            reg.gauge("maintenance.window_gain").set(self.window_gain)
 
     def _record_wave(self, estimated_s: float, measured_s: float) -> None:
         self.wave_log.append((float(estimated_s), float(measured_s)))
@@ -188,6 +236,7 @@ class MaintenancePolicy:
                 else wave.makespan_s
             )
             self._record_wave(wave.makespan_s, measured)
+            self._trace_wave(now + used, wave, measured)
             self.n_waves += 1
             used += measured
             if used >= gap_s:
@@ -202,6 +251,7 @@ class MaintenancePolicy:
         ):
             if self.store.compact():
                 self.n_compactions += 1
+                self._trace_simple("compact", now + used, self.cfg.compact_cost_s)
                 used += self.cfg.compact_cost_s
         # 3. periodic heat maintenance (diffusion + eviction + residual)
         if self._maintain_due(now) and used + self.cfg.maintain_cost_s <= gap_s:
@@ -210,8 +260,13 @@ class MaintenancePolicy:
             )
             self._last_maintain = now
             self.n_maintains += 1
+            self._trace_simple("maintain", now + used, self.cfg.maintain_cost_s)
             used += self.cfg.maintain_cost_s
         return used
+
+    def _trace_simple(self, name: str, t0: float, cost_s: float) -> None:
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.record(name, t0, t0 + cost_s, track="maintenance")
 
     def drain(self, now: float = 0.0) -> float:
         """Run all armed/outstanding maintenance to completion (unbounded

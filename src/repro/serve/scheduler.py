@@ -46,6 +46,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import Tracer, get_registry
 from .client import RequestHandle
 
 __all__ = ["SimClock", "AdmissionConfig", "BatchRecord", "AdmissionController"]
@@ -139,11 +140,20 @@ class AdmissionController:
     """
 
     def __init__(self, store, config: Optional[AdmissionConfig] = None,
-                 clock: Optional[SimClock] = None, policy=None) -> None:
+                 clock: Optional[SimClock] = None, policy=None,
+                 tracer: Optional[Tracer] = None, registry=None) -> None:
         self.store = store
         self.cfg = config or AdmissionConfig()
         self.clock = clock or SimClock()
         self.policy = policy  # optional MaintenancePolicy
+        # control-plane spans run on the *simulated* clock: two identical
+        # runs produce byte-identical trace exports.  An attached policy
+        # without its own tracer shares this one, so migration waves land on
+        # the same timeline as the request spans they interleave with.
+        self.tracer = tracer if tracer is not None else Tracer(clock=self.clock.now)
+        self._registry = registry
+        if policy is not None and getattr(policy, "tracer", None) is None:
+            policy.tracer = self.tracer
         self.batch_target = int(
             min(max(self.cfg.initial_batch, self.cfg.min_batch), self.cfg.max_batch)
         )
@@ -161,7 +171,14 @@ class AdmissionController:
         self._t_last_done = 0.0
         self.completed = 0
         self.deadline_misses = 0
+        # every miss is attributed to exactly one cause (the first stage
+        # whose cumulative time blew the deadline), so the three counts
+        # always sum to ``deadline_misses``
+        self.misses_by_cause: Dict[str, int] = {
+            "queue": 0, "service": 0, "straggler": 0
+        }
         self.served_by_origin: Dict[int, int] = {}
+        self._lat_by_origin: Dict[int, Deque[float]] = {}
         self.history: Deque[BatchRecord] = deque(maxlen=self.cfg.history_window)
         self._n_batches = 0
         self._batch_size_sum = 0
@@ -346,6 +363,13 @@ class AdmissionController:
         )
         straggler = max((r.latency_s for r in results), default=0.0)
         t_done = t0 + compute_s + straggler
+        bid = self._n_batches
+        traced = self.tracer.enabled
+        if traced:
+            self.tracer.record(
+                "drain", t0, t0 + compute_s, track="scheduler",
+                batch=bid, size=len(batch), target=target,
+            )
         misses = 0
         for h, r in zip(batch, results):
             h.result = r
@@ -354,9 +378,31 @@ class AdmissionController:
             self._lat_window.append(h.latency_s)
             self._latencies.append(h.latency_s)
             self._lat_sum += h.latency_s
+            self._lat_by_origin.setdefault(
+                h.origin, deque(maxlen=self.cfg.metrics_window)
+            ).append(h.latency_s)
             if h.deadline_missed:
                 misses += 1
+                self.misses_by_cause[self._miss_cause(h, t0, compute_s)] += 1
             self.served_by_origin[h.origin] = self.served_by_origin.get(h.origin, 0) + 1
+            if traced:
+                root = self.tracer.record(
+                    "request", h.t_submit, t_done, track="requests",
+                    rid=h.rid, origin=h.origin, priority=h.priority, batch=bid,
+                )
+                self.tracer.record(
+                    "queue", h.t_submit, t0, track="requests", parent=root,
+                    origin=h.origin,
+                )
+                self.tracer.record(
+                    "route", t0, t0 + compute_s, track="requests", parent=root,
+                    origin=h.origin,
+                )
+                self.tracer.record(
+                    "wan_fetch", t0 + compute_s, t_done, track="requests",
+                    parent=root, origin=h.origin,
+                    layers=r.layers_used, dcs=len(r.dcs),
+                )
         self.completed += len(batch)
         self.deadline_misses += misses
         self._t_last_done = max(self._t_last_done, t_done)
@@ -369,6 +415,21 @@ class AdmissionController:
         self.clock.advance(compute_s)  # fetches overlap the next drain
         self._update_target(batch)
         return batch
+
+    @staticmethod
+    def _miss_cause(h: RequestHandle, t0: float, compute_s: float) -> str:
+        """Attribute a deadline miss to the first stage that overran.
+
+        ``queue``: the request was already late when dispatched;
+        ``service``: dispatch + router occupancy alone blew the deadline;
+        ``straggler``: only the batch's slowest WAN fetch pushed it over.
+        The stages partition every miss, so cause counts sum exactly to
+        ``deadline_misses``."""
+        if t0 - h.t_submit > h.deadline_s:
+            return "queue"
+        if (t0 + compute_s) - h.t_submit > h.deadline_s:
+            return "service"
+        return "straggler"
 
     def _update_target(self, batch: List[RequestHandle]) -> None:
         """AIMD on measured latency vs deadline slack (adaptive policy)."""
@@ -413,9 +474,14 @@ class AdmissionController:
         return {
             "completed": self.completed,
             "deadline_misses": self.deadline_misses,
+            "misses_by_cause": dict(self.misses_by_cause),
             # quantiles over the (ring-buffered) most recent metrics_window
             "p50_s": float(np.quantile(lat, 0.50)) if len(lat) else 0.0,
             "p99_s": float(np.quantile(lat, 0.99)) if len(lat) else 0.0,
+            "p99_by_origin": {
+                o: float(np.quantile(np.asarray(w, dtype=np.float64), 0.99))
+                for o, w in sorted(self._lat_by_origin.items())
+            },
             "mean_s": self._lat_sum / self.completed if self.completed else 0.0,
             "throughput_rps": self.completed / span if span > 0 else 0.0,
             "n_batches": self._n_batches,

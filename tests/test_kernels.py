@@ -120,7 +120,12 @@ def test_dhd_kernel_batch_matches_ref(n, kmax, block_n, B, batched_vals):
 
 def test_dhd_tail_edge_cache_reused():
     """Repeated dhd_step calls with the same adjacency arrays must hit the
-    deduped-edge cache instead of rebuilding the edge list host-side."""
+    deduped-edge cache instead of rebuilding the edge list host-side.
+
+    Hit/miss counts live in the metrics registry now (no module-global
+    leaking across runs), so the test enables a throwaway registry."""
+    from repro.obs import MetricsRegistry, set_default_registry
+
     rng = np.random.default_rng(8)
     n = 48
     a = rng.integers(0, n, 140)
@@ -134,11 +139,22 @@ def test_dhd_tail_edge_cache_reused():
                   jnp.asarray(ell.tail_val))
     heat = jnp.asarray(rng.random(n), jnp.float32)
     q = jnp.asarray(rng.random(n) * 0.1, jnp.float32)
-    r1 = ops.dhd_step(heat, cols, vals, q, ts, td, tv)
-    hits0 = ops._EDGE_CACHE_STATS["hits"]
-    r2 = ops.dhd_step(heat, cols, vals, q, ts, td, tv)
-    rb = ops.dhd_step_batch(heat[None], cols, vals, q[None], ts, td, tv)
-    assert ops._EDGE_CACHE_STATS["hits"] >= hits0 + 2
+    old = set_default_registry(MetricsRegistry(enabled=True))
+    try:
+        r1 = ops.dhd_step(heat, cols, vals, q, ts, td, tv)
+        hits0 = ops.edge_cache_stats()["hits"]
+        r2 = ops.dhd_step(heat, cols, vals, q, ts, td, tv)
+        rb = ops.dhd_step_batch(heat[None], cols, vals, q[None], ts, td, tv)
+        stats = ops.edge_cache_stats()
+        assert stats["hits"] >= hits0 + 2
+        assert 0.0 < stats["hit_rate"] <= 1.0
+    finally:
+        reg = set_default_registry(old)
+    # registry reset clears the counts (the old module-global never did)
+    reg.reset()
+    assert set_default_registry(reg) is old  # install to read, then restore
+    assert ops.edge_cache_stats() == {"hits": 0, "misses": 0, "hit_rate": 0.0}
+    set_default_registry(old)
     np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=0)
     np.testing.assert_allclose(np.asarray(rb[0]), np.asarray(r1), atol=1e-6)
 
