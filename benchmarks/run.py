@@ -32,6 +32,7 @@ def main() -> None:
         bench_precache,
         bench_scheduler,
         bench_serving,
+        bench_sharded,
         bench_streaming,
     )
 
@@ -47,6 +48,7 @@ def main() -> None:
         "kernels": bench_kernels.run,
         "streaming": bench_streaming.run,
         "serving": bench_serving.run,
+        "sharded": bench_sharded.run,
         "placement": bench_placement.run,
         "migration": bench_migration.run,
         "scheduler": bench_scheduler.run,

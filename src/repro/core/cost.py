@@ -13,7 +13,6 @@ benchmarks and tests evaluate every strategy against.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -58,23 +57,14 @@ class PlacementState:
     def route_nearest(
         self,
         env: GeoEnvironment,
-        sizes: Optional[np.ndarray] = None,
         rows: Optional[np.ndarray] = None,
     ) -> None:
         """Route every (item, origin) to its latency-minimal replica (Eq. 1).
 
-        ``sizes`` is deprecated and ignored: the per-item size term is
-        identical across candidate DCs, so RTT alone ranks them.  ``rows``
-        restricts the refresh to a subset of items — the streaming
-        partial-reroute path after replica-set changes."""
-        if sizes is not None:
-            warnings.warn(
-                "PlacementState.route_nearest(sizes=...) is deprecated and "
-                "ignored: RTT alone ranks candidate replicas (the size term "
-                "is identical across DCs). Drop the argument.",
-                DeprecationWarning,
-                stacklevel=2,
-            )
+        The per-item size term is identical across candidate DCs, so RTT
+        alone ranks them.  ``rows`` restricts the refresh to a subset of
+        items — the streaming partial-reroute path after replica-set
+        changes."""
         lat = env.rtt_s.copy()  # [d, y]; size term identical across d per item
         np.fill_diagonal(lat, 0.0)
         delta = self.delta if rows is None else self.delta[rows]

@@ -30,14 +30,14 @@ patches immediately.  ``verify`` cross-checks against a from-scratch
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .graph import grow_item_rows
 from .latency import GeoEnvironment
 
-__all__ = ["RouteIndex", "RouteIndexStats"]
+__all__ = ["RouteIndex", "RouteIndexStats", "RoutePartition"]
 
 
 @dataclasses.dataclass
@@ -64,6 +64,21 @@ class RouteIndex:
         self.nearest = np.full((n_items, env.n_dcs), -1, dtype=np.int32)
         self.second = np.full((n_items, env.n_dcs), -1, dtype=np.int32)
         self.stats = RouteIndexStats()
+        # change-event subscribers (the sharded store's per-origin partitions
+        # mirror the index through these instead of polling): fn(kind, payload)
+        # with kinds "rows" (patched row ids), "grow" ((old_n_nodes, n_new_v,
+        # n_new_e)), "take" (row permutation), "rebuild" (None)
+        self._listeners: List[Callable[[str, object], None]] = []
+
+    # --------------------------------------------------------------- events
+    def subscribe(self, fn: Callable[[str, object], None]) -> None:
+        """Register a change listener; fired after each index mutation, when
+        the placement ``delta`` the mutation derived from is still current."""
+        self._listeners.append(fn)
+
+    def _emit(self, kind: str, payload: object = None) -> None:
+        for fn in self._listeners:
+            fn(kind, payload)
 
     # ------------------------------------------------------------- building
     @staticmethod
@@ -97,6 +112,8 @@ class RouteIndex:
         """Full from-scratch derivation (init / strategy switch / fallback)."""
         self.nearest, self.second = self._argmin2(delta)
         self.stats.full_rebuilds += 1
+        if self._listeners:
+            self._emit("rebuild")
 
     def patch_rows(self, delta: np.ndarray, rows: np.ndarray) -> None:
         """Re-derive exactly ``rows`` (replica sets changed arbitrarily)."""
@@ -105,6 +122,8 @@ class RouteIndex:
             return
         self.nearest[rows], self.second[rows] = self._argmin2(delta[rows])
         self.stats.rows_patched += len(rows)
+        if self._listeners:
+            self._emit("rows", rows)
 
     # ----------------------------------------------------------- delta ops
     def add_replicas(self, delta: np.ndarray, items: np.ndarray, dc: int) -> None:
@@ -140,6 +159,8 @@ class RouteIndex:
         self.nearest[items] = n2.astype(np.int32)
         self.second[items] = s2.astype(np.int32)
         self.stats.rows_shifted += len(items)
+        if self._listeners:
+            self._emit("rows", items)
 
     def drop_replicas(self, delta: np.ndarray, items: np.ndarray, dc: int) -> None:
         """Absorb "replica of ``items`` vanished from ``dc``".
@@ -174,6 +195,8 @@ class RouteIndex:
         # a row that lost its only replica: nearest promoted to -1 already
         self.nearest[items] = n.astype(np.int32)
         self.second[items] = s.astype(np.int32)
+        if self._listeners:
+            self._emit("rows", items)
 
     def apply_moves(self, delta: np.ndarray, moves: Sequence) -> None:
         """Patch the index for an applied migration move-set.
@@ -218,11 +241,15 @@ class RouteIndex:
         self.second = grow_item_rows(
             self.second, old_n_nodes, n_new_vertices, n_new_edges, -1
         )
+        if self._listeners:
+            self._emit("grow", (old_n_nodes, n_new_vertices, n_new_edges))
 
     def clear_rows(self, rows: np.ndarray) -> None:
         rows = np.asarray(rows, dtype=np.int64)
         self.nearest[rows] = -1
         self.second[rows] = -1
+        if self._listeners:
+            self._emit("rows", rows)
 
     def apply_batch(
         self,
@@ -249,6 +276,8 @@ class RouteIndex:
         order = np.asarray(order, dtype=np.int64)
         self.nearest = self.nearest[order]
         self.second = self.second[order]
+        if self._listeners:
+            self._emit("take", order)
 
     # ------------------------------------------------------------- checking
     def verify(self, delta: np.ndarray) -> bool:
@@ -256,4 +285,91 @@ class RouteIndex:
         ref_n, ref_s = self._argmin2(delta)
         return bool(
             np.array_equal(self.nearest, ref_n) and np.array_equal(self.second, ref_s)
+        )
+
+
+class RoutePartition:
+    """One origin DC's column of the route index, owned by a store shard.
+
+    The sharded store keeps the coordinator :class:`RouteIndex` authoritative
+    and streams its change events (:meth:`RouteIndex.subscribe`) to the shard
+    that owns each origin.  A partition does **not** copy the coordinator's
+    column: on every event it independently re-derives its rows from the
+    replicated placement map (the same masked-argmin math restricted to one
+    origin), so shard/coordinator divergence is a detectable bug
+    (:meth:`verify_against`) rather than definitionally impossible.
+
+    ``delta_fn`` must return the *current* placement map — the store swaps
+    the underlying array on growth and compaction, so the partition holds a
+    provider, never the array itself.
+    """
+
+    def __init__(
+        self,
+        env: GeoEnvironment,
+        dc: int,
+        delta_fn: Callable[[], np.ndarray],
+    ) -> None:
+        self.dc = int(dc)
+        lat = env.rtt_s.copy()
+        np.fill_diagonal(lat, 0.0)
+        self.lat_col = lat[:, self.dc]  # [D] serving-DC -> this origin
+        self._delta_fn = delta_fn
+        self.nearest = np.zeros(0, dtype=np.int32)
+        self.second = np.zeros(0, dtype=np.int32)
+        self.derive_all()
+
+    @property
+    def n_items(self) -> int:
+        return self.nearest.shape[0]
+
+    def _derive(self, delta_rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(nearest, second) for this origin over ``delta_rows`` — the
+        column restriction of :meth:`RouteIndex._argmin2`, same lower-DC-id
+        tie-break."""
+        big = np.where(delta_rows, self.lat_col[None, :], np.inf)
+        nearest = np.argmin(big, axis=1).astype(np.int32)
+        k = np.arange(big.shape[0])
+        best = big[k, nearest]
+        big[k, nearest] = np.inf
+        second = np.argmin(big, axis=1).astype(np.int32)
+        second = np.where(np.isfinite(big[k, second]), second, -1).astype(np.int32)
+        nearest = np.where(np.isfinite(best), nearest, -1).astype(np.int32)
+        return nearest, second
+
+    def derive_all(self) -> None:
+        self.nearest, self.second = self._derive(self._delta_fn())
+
+    def on_event(self, kind: str, payload: object) -> None:
+        """Absorb one :class:`RouteIndex` change event."""
+        if kind == "rows":
+            rows = np.asarray(payload, dtype=np.int64)
+            if len(rows) == 0:
+                return
+            n, s = self._derive(self._delta_fn()[rows])
+            self.nearest[rows] = n
+            self.second[rows] = s
+        elif kind == "grow":
+            old_n_nodes, n_new_vertices, n_new_edges = payload
+            self.nearest = grow_item_rows(
+                self.nearest, old_n_nodes, n_new_vertices, n_new_edges, -1
+            )
+            self.second = grow_item_rows(
+                self.second, old_n_nodes, n_new_vertices, n_new_edges, -1
+            )
+        elif kind == "take":
+            order = np.asarray(payload, dtype=np.int64)
+            self.nearest = self.nearest[order]
+            self.second = self.second[order]
+        elif kind == "rebuild":
+            self.derive_all()
+        else:  # pragma: no cover - future event kinds must not silently drop
+            raise ValueError(f"unknown route-index event {kind!r}")
+
+    def verify_against(self, index: RouteIndex) -> bool:
+        """True iff the partition equals the coordinator's column for this
+        origin (the sharded differential invariant)."""
+        return bool(
+            np.array_equal(self.nearest, index.nearest[:, self.dc])
+            and np.array_equal(self.second, index.second[:, self.dc])
         )

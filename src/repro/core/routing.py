@@ -119,11 +119,80 @@ def route_online(
     )
 
 
+def _expand_single_origin(
+    lg: LayeredGraph,
+    delta_all: np.ndarray,
+    req_id: np.ndarray,
+    R: int,
+    o: int,
+    served: np.ndarray,
+    layers_used: np.ndarray,
+    reg,
+    obs: bool,
+) -> None:
+    """Greedy layered expansion for a batch that shares one origin DC.
+
+    Request-identical to the mixed-origin lockstep loop (same greedy
+    max-coverage, same lowest-DC-id tie-break), but the shared origin means
+    every request sees the *same* cluster per layer — so layer-0 is a column
+    slice instead of a per-row gather, coverage bincounts run over only the
+    cluster's columns, and every greedy pass touches only the still-missing
+    rows.  This is the per-shard serving path: the sharded store dispatches
+    per-origin sub-batches, which land here.
+    """
+    K = delta_all.shape[0]
+    local = delta_all[:, o]
+    served[local] = o
+    idx = np.where(~local)[0]  # flat positions still missing
+    if obs:
+        unresolved = len(idx)
+        reg.counter_keyed("routing.layer_hits", _layer_tags(0)).inc(K - unresolved)
+    for layer in range(1, lg.n_layers + 1):
+        if len(idx) == 0:
+            break
+        if obs:
+            t_layer = time.perf_counter()
+        comp = lg.comp_of_dc[layer]
+        cluster = np.where(comp == comp[o])[0]
+        cluster = cluster[cluster != o]
+        if len(cluster):
+            layers_used[np.unique(req_id[idx])] = layer
+            ar_R = np.arange(R)
+            while len(idx):
+                rid = req_id[idx]
+                sub = delta_all[np.ix_(idx, cluster)]  # [missing, |cluster|]
+                cover = np.stack(
+                    [
+                        np.bincount(rid, weights=sub[:, j], minlength=R)
+                        for j in range(len(cluster))
+                    ],
+                    axis=1,
+                )
+                best_j = np.argmax(cover, axis=1)  # lowest-id tie-break
+                gain = cover[ar_R, best_j]
+                if not (gain > 0).any():
+                    break  # escalate to the next layer
+                hit = (gain[rid] > 0) & sub[np.arange(len(idx)), best_j[rid]]
+                served[idx[hit]] = cluster[best_j[rid[hit]]]
+                idx = idx[~hit]
+        if obs:
+            reg.counter_keyed("routing.layer_time_s", _layer_tags(layer)).inc(
+                time.perf_counter() - t_layer
+            )
+            reg.counter_keyed("routing.layer_hits", _layer_tags(layer)).inc(
+                unresolved - len(idx)
+            )
+            unresolved = len(idx)
+    if obs:
+        reg.counter_keyed("routing.unresolved_items", ()).inc(len(idx))
+
+
 def route_online_batch(
     lg: LayeredGraph,
     state: PlacementState,
     requests: Sequence[Tuple[np.ndarray, int]],
     sizes: Optional[np.ndarray] = None,
+    registry=None,
 ) -> List[RouteResult]:
     """Bottom-up expanding retrieval for a whole request batch at once.
 
@@ -134,16 +203,27 @@ def route_online_batch(
     ``[R, D]`` and the per-request greedy pick is one masked argmax — the
     per-pattern Python loops collapse into a handful of numpy passes whose
     count is bounded by the layer's cluster width, not the batch size.
+
+    A batch whose requests all share one origin (the sharded store's
+    per-shard sub-batches) takes :func:`_expand_single_origin` instead of
+    the lockstep loop — same results, less work per pass.
+
+    ``registry`` routes serving/routing telemetry into an explicit
+    :class:`~repro.obs.MetricsRegistry` (a shard's private registry);
+    ``None`` falls back to the process default.
     """
     env = lg.env
     R = len(requests)
     if R == 0:
         return []
-    if R == 1:
+    reg = registry if registry is not None else get_registry()
+    if R == 1 and not reg.enabled:
         # size-1 fast path: the flat batch machinery (request-id bookkeeping,
         # [R, D] coverage stacks) costs ~2x the scalar router at R == 1
         # (BENCH_serving batch-1 speedup was 0.48) and the scalar path is
-        # definitionally request-identical
+        # definitionally request-identical.  With telemetry enabled the
+        # batch path runs even at R == 1 so every served request is counted
+        # (the sharded store's per-shard registries must account exactly).
         items, origin = requests[0]
         return [route_online(lg, state, np.asarray(items), int(origin), sizes=sizes)]
     if sizes is None:
@@ -168,72 +248,78 @@ def route_online_batch(
 
     # coverage telemetry: per-layer resolved-item counters + expansion
     # timing, all gated so the disabled path costs one attribute load
-    reg = get_registry()
     obs = reg.enabled
     if obs:
         reg.counter_keyed("serving.requests", ()).inc(R)
 
-    # Layer_0: local items first
-    local = delta_all[ar_K, org_all]
-    served[local] = org_all[local]
+    if (origin == origin[0]).all():
+        _expand_single_origin(
+            lg, delta_all, req_id, R, int(origin[0]), served, layers_used, reg, obs
+        )
+    else:
+        # Layer_0: local items first
+        local = delta_all[ar_K, org_all]
+        served[local] = org_all[local]
 
-    missing_per_req = np.bincount(req_id[served < 0], minlength=R)
-    if obs:
-        unresolved = int(missing_per_req.sum())
-        reg.counter_keyed("routing.layer_hits", _layer_tags(0)).inc(K - unresolved)
-    for layer in range(1, lg.n_layers + 1):
-        active = missing_per_req > 0
-        if not active.any():
-            break
-        if obs:
-            t_layer = time.perf_counter()
-        comp = lg.comp_of_dc[layer]  # [D]
-        allowed = comp[origin][:, None] == comp[None, :]  # [R, D]
-        allowed[ar_R, origin] = False
-        # route_online marks a layer "used" whenever its cluster is non-empty
-        # for a still-unresolved request, even if nothing is found there
-        has_cluster = allowed.any(axis=1)
-        layers_used[active & has_cluster] = layer
-        # greedy max-coverage, all active requests in lockstep: each pass
-        # computes every request's best cluster DC and assigns its hits —
-        # requests are independent, so lockstep == per-request greedy
-        while True:
-            miss = served < 0
-            if not miss.any():
-                break
-            # segment-sum coverage per request: D bincounts beat a slow
-            # ufunc.at scatter (D is a handful, the batch is the long axis)
-            cover = np.stack(
-                [
-                    np.bincount(req_id, weights=delta_all[:, d] * miss, minlength=R)
-                    for d in range(D)
-                ],
-                axis=1,
-            )
-            cover[~allowed] = 0.0
-            best = np.argmax(cover, axis=1)  # lowest-id tie-break, like route_online
-            gain = cover[ar_R, best]
-            progress = gain > 0
-            if not progress.any():
-                break
-            hit = miss & progress[req_id] & delta_all[ar_K, best[req_id]]
-            served[hit] = best[req_id[hit]]
         missing_per_req = np.bincount(req_id[served < 0], minlength=R)
         if obs:
-            # cumulative seconds as a counter (count comes from layer_hits'
-            # batch count): a scalar histogram observe costs ~10us in P²
-            # marker maths, which the 5% serving budget cannot spare
-            reg.counter_keyed("routing.layer_time_s", _layer_tags(layer)).inc(
-                time.perf_counter() - t_layer
-            )
-            now_unresolved = int(missing_per_req.sum())
-            reg.counter_keyed("routing.layer_hits", _layer_tags(layer)).inc(
-                unresolved - now_unresolved
-            )
-            unresolved = now_unresolved
+            unresolved = int(missing_per_req.sum())
+            reg.counter_keyed("routing.layer_hits", _layer_tags(0)).inc(K - unresolved)
+        for layer in range(1, lg.n_layers + 1):
+            active = missing_per_req > 0
+            if not active.any():
+                break
+            if obs:
+                t_layer = time.perf_counter()
+            comp = lg.comp_of_dc[layer]  # [D]
+            allowed = comp[origin][:, None] == comp[None, :]  # [R, D]
+            allowed[ar_R, origin] = False
+            # route_online marks a layer "used" whenever its cluster is
+            # non-empty for a still-unresolved request, even if nothing is
+            # found there
+            has_cluster = allowed.any(axis=1)
+            layers_used[active & has_cluster] = layer
+            # greedy max-coverage, all active requests in lockstep: each pass
+            # computes every request's best cluster DC and assigns its hits —
+            # requests are independent, so lockstep == per-request greedy
+            while True:
+                miss = served < 0
+                if not miss.any():
+                    break
+                # segment-sum coverage per request: D bincounts beat a slow
+                # ufunc.at scatter (D is a handful, the batch is the long axis)
+                cover = np.stack(
+                    [
+                        np.bincount(req_id, weights=delta_all[:, d] * miss, minlength=R)
+                        for d in range(D)
+                    ],
+                    axis=1,
+                )
+                cover[~allowed] = 0.0
+                best = np.argmax(cover, axis=1)  # lowest-id tie-break
+                gain = cover[ar_R, best]
+                progress = gain > 0
+                if not progress.any():
+                    break
+                hit = miss & progress[req_id] & delta_all[ar_K, best[req_id]]
+                served[hit] = best[req_id[hit]]
+            missing_per_req = np.bincount(req_id[served < 0], minlength=R)
+            if obs:
+                # cumulative seconds as a counter (count comes from
+                # layer_hits' batch count): a scalar histogram observe costs
+                # ~10us in P² marker maths, which the 5% serving budget
+                # cannot spare
+                reg.counter_keyed("routing.layer_time_s", _layer_tags(layer)).inc(
+                    time.perf_counter() - t_layer
+                )
+                now_unresolved = int(missing_per_req.sum())
+                reg.counter_keyed("routing.layer_hits", _layer_tags(layer)).inc(
+                    unresolved - now_unresolved
+                )
+                unresolved = now_unresolved
 
-    if obs:
-        reg.counter_keyed("routing.unresolved_items", ()).inc(unresolved)
+        if obs:
+            reg.counter_keyed("routing.unresolved_items", ()).inc(unresolved)
 
     # resolved latency per (request, DC): served bytes -> Eq. 1, vectorized
     srv = served >= 0

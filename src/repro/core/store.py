@@ -239,7 +239,9 @@ class GeoGraphStore:
             if self.routing_name == "stepwise":
                 # serving.* counters/histograms are emitted batch-granular
                 # inside route_online_batch, where the flat arrays live
-                results = route_online_batch(self.lg, self.state, norm)
+                results = route_online_batch(
+                    self.lg, self.state, norm, registry=self._registry
+                )
             else:
                 results = [self._route_by_table(it, o) for it, o in norm]
                 reg = self._reg()

@@ -1,1 +1,14 @@
-from . import collectives, compression, fault, geo_sharding, sharding  # noqa: F401
+from . import (  # noqa: F401
+    collectives,
+    compression,
+    fault,
+    geo_sharding,
+    sharded_store,
+    sharding,
+)
+from .fault import StragglerDetector, StragglerMitigator  # noqa: F401
+from .sharded_store import (  # noqa: F401
+    ShardedGeoGraphStore,
+    StoreShard,
+    payload_for_uids,
+)

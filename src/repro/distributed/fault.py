@@ -19,6 +19,7 @@ __all__ = [
     "FailureSimulator",
     "elastic_mesh_shape",
     "reshard_tree",
+    "StragglerDetector",
     "StragglerMitigator",
 ]
 
@@ -71,7 +72,62 @@ def reshard_tree(tree: Any, mesh, spec_tree) -> Any:
     return jax.tree_util.tree_map(put, tree, spec_tree)
 
 
-class StragglerMitigator:
+class StragglerDetector:
+    """EWMA per-shard latency tracker with a median-relative lag flag.
+
+    The detection core shared by the data-pipeline mitigator below and the
+    sharded serving path: :class:`~repro.distributed.ShardedGeoGraphStore`
+    feeds each shard's measured ``serve_batch`` wall time through
+    :meth:`observe`, and the admission controller reads :meth:`is_straggler`
+    to attribute a deadline miss to a lagging shard instead of the WAN fetch.
+    """
+
+    def __init__(self, n_shards: int, threshold: float = 1.8, alpha: float = 0.3):
+        self.lat = np.zeros(n_shards)
+        self.threshold = threshold
+        self.alpha = alpha
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.lat)
+
+    def observe(self, shard: int, seconds: float) -> None:
+        if self.lat[shard] == 0:
+            self.lat[shard] = seconds
+        else:
+            self.lat[shard] = (1 - self.alpha) * self.lat[shard] + self.alpha * seconds
+
+    def ewma(self, shard: int) -> float:
+        return float(self.lat[shard])
+
+    def median(self) -> float:
+        """Median EWMA over shards with at least one observation (0 if none)."""
+        active = self.lat > 0
+        return float(np.median(self.lat[active])) if active.any() else 0.0
+
+    def is_straggler(self, shard: int) -> bool:
+        """True when ``shard`` lags the active-shard median by ``threshold``x.
+
+        Needs >= 2 observed shards (one shard has no fleet to lag behind)."""
+        active = self.lat > 0
+        if not (0 <= shard < len(self.lat)) or active.sum() < 2:
+            return False
+        return bool(self.lat[shard] > self.threshold * np.median(self.lat[active]))
+
+    def flagged(self) -> List[int]:
+        """Shard ids currently flagged as stragglers."""
+        return [s for s in range(len(self.lat)) if self.is_straggler(s)]
+
+    def snapshot(self) -> Dict[str, object]:
+        return {
+            "ewma_s": self.lat.tolist(),
+            "median_s": self.median(),
+            "threshold": self.threshold,
+            "flagged": self.flagged(),
+        }
+
+
+class StragglerMitigator(StragglerDetector):
     """Host-side straggler mitigation for the data pipeline.
 
     Tracks per-shard step latencies (EWMA); when one feeder lags the median
@@ -80,16 +136,8 @@ class StragglerMitigator:
     compiler's static schedule; the pipeline is where host jitter bites."""
 
     def __init__(self, n_shards: int, threshold: float = 1.8, alpha: float = 0.3):
-        self.lat = np.zeros(n_shards)
-        self.threshold = threshold
-        self.alpha = alpha
+        super().__init__(n_shards, threshold=threshold, alpha=alpha)
         self.reassigned: Dict[int, int] = {}
-
-    def observe(self, shard: int, seconds: float) -> None:
-        if self.lat[shard] == 0:
-            self.lat[shard] = seconds
-        else:
-            self.lat[shard] = (1 - self.alpha) * self.lat[shard] + self.alpha * seconds
 
     def plan(self) -> Dict[int, int]:
         """shard -> substitute feeder for shards flagged as stragglers."""

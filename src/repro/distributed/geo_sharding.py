@@ -31,6 +31,7 @@ from ..core.latency import GeoEnvironment
 
 __all__ = [
     "mesh_env",
+    "mesh_devices",
     "HaloPlan",
     "plan_gnn_halo",
     "plan_expert_replicas",
@@ -65,6 +66,25 @@ def mesh_env(n_shards: int, shards_per_pod: Optional[int] = None) -> GeoEnvironm
         c_write=np.full(n_shards, 0.0),
         c_net=1.0 / bw,
     )
+
+
+def mesh_devices(n_shards: int) -> List:
+    """One jax device per store shard, cycling when the runtime exposes
+    fewer than ``n_shards``.
+
+    Tests/CI force an N-device CPU mesh with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before jax
+    initializes).  Without it every shard lands on device 0 — the
+    single-process fallback: functionally identical, payload transfers
+    degenerate to same-device copies, nothing runs in parallel.
+
+    jax imports lazily so the placement/routing planners in this module stay
+    importable without an accelerator runtime.
+    """
+    import jax
+
+    devs = jax.devices()
+    return [devs[i % len(devs)] for i in range(n_shards)]
 
 
 @dataclasses.dataclass

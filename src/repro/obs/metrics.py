@@ -482,6 +482,63 @@ class MetricsRegistry:
     ) -> Histogram:
         return self._get(Histogram, name, tags, quantiles=quantiles)
 
+    # -- aggregation -------------------------------------------------------
+    @staticmethod
+    def merge(snapshots: Iterable[Mapping[str, Mapping[str, dict]]]) -> dict:
+        """Merge per-shard :meth:`snapshot` dicts into one aggregate view.
+
+        The sharded store's per-shard registries export independently; this
+        folds them into a single dashboard/trace-exportable snapshot:
+
+          * counters sum (matrix-counter cells already export as per-cell
+            counters, so per-link byte grids add element-wise);
+          * gauges keep the last non-NaN write (snapshot order);
+          * histograms merge exactly on count/sum/min/max (mean recomputed)
+            and approximately on quantiles — a count-weighted average of the
+            per-shard P² estimates, the standard sketch-merge compromise.
+
+        Returns a plain dict in :meth:`snapshot` shape.
+        """
+        out: Dict[str, Dict[str, dict]] = {}
+        for snap in snapshots:
+            for name, by_tag in snap.items():
+                dst_by = out.setdefault(name, {})
+                for tag, inst in by_tag.items():
+                    cur = dst_by.get(tag)
+                    if cur is None:
+                        dst_by[tag] = {
+                            k: (dict(v) if isinstance(v, dict) else v)
+                            for k, v in inst.items()
+                        }
+                        if inst.get("type") == "histogram":
+                            # stash the weights quantile-averaging needs
+                            dst_by[tag]["_qweight"] = {
+                                q: inst["count"]
+                                for q, v in inst.get("quantiles", {}).items()
+                                if not math.isnan(v)
+                            }
+                        continue
+                    if cur["type"] != inst["type"]:
+                        raise ValueError(
+                            f"{name}/{tag}: cannot merge {inst['type']} "
+                            f"into {cur['type']}"
+                        )
+                    if cur["type"] == "counter":
+                        cur["value"] += inst["value"]
+                    elif cur["type"] == "gauge":
+                        if not math.isnan(inst["value"]):
+                            cur["value"] = inst["value"]
+                    elif cur["type"] == "histogram":
+                        _merge_histogram_snapshots(cur, inst)
+                    else:
+                        raise ValueError(
+                            f"{name}/{tag}: unmergeable type {cur['type']!r}"
+                        )
+        for by_tag in out.values():
+            for inst in by_tag.values():
+                inst.pop("_qweight", None)
+        return out
+
     # -- export ------------------------------------------------------------
     def snapshot(self) -> dict:
         """Nested-dict view: ``{name: {tag_repr: instrument_snapshot}}``."""
@@ -502,6 +559,35 @@ class MetricsRegistry:
             with open(path, "w") as f:
                 f.write(text + "\n")
         return text
+
+
+def _merge_histogram_snapshots(cur: dict, inst: dict) -> None:
+    """Fold histogram snapshot ``inst`` into ``cur`` (in place).
+
+    count/sum/min/max merge exactly; each tracked quantile becomes the
+    count-weighted average of the shard estimates (``_qweight`` carries the
+    accumulated weight per quantile so later folds stay correctly weighted).
+    """
+    n_new = inst["count"]
+    cur["count"] += n_new
+    cur["sum"] += inst["sum"]
+    cur["mean"] = cur["sum"] / cur["count"] if cur["count"] else math.nan
+    for key, pick in (("min", min), ("max", max)):
+        v = inst[key]
+        if not math.isnan(v):
+            cur[key] = v if math.isnan(cur[key]) else pick(cur[key], v)
+    weights = cur.setdefault("_qweight", {})
+    quant = cur.setdefault("quantiles", {})
+    for q, v in inst.get("quantiles", {}).items():
+        if math.isnan(v) or n_new == 0:
+            continue
+        w_old = weights.get(q, 0)
+        old = quant.get(q, math.nan)
+        if w_old == 0 or math.isnan(old):
+            quant[q] = v
+        else:
+            quant[q] = (old * w_old + v * n_new) / (w_old + n_new)
+        weights[q] = w_old + n_new
 
 
 _default_registry = MetricsRegistry(enabled=False)

@@ -85,6 +85,11 @@ class AdmissionConfig:
 
     policy: str = "adaptive"
     fairness: str = "round_robin"  # or "fifo"
+    # one AIMD batch target per store shard (sharded stores expose
+    # ``origin_shard``): each drain serves a single shard, round-robin
+    # across shards with pending work, so a lagging shard shrinks its own
+    # target without throttling the healthy ones
+    per_shard_aimd: bool = False
     min_batch: int = 1
     max_batch: int = 256
     initial_batch: int = 8
@@ -110,6 +115,14 @@ class AdmissionConfig:
             raise ValueError(f"unknown policy {self.policy!r}")
         if self.fairness not in ("round_robin", "fifo"):
             raise ValueError(f"unknown fairness {self.fairness!r}")
+        if self.per_shard_aimd and (
+            self.policy != "adaptive" or self.fairness != "round_robin"
+        ):
+            raise ValueError(
+                "per_shard_aimd needs policy='adaptive' and "
+                "fairness='round_robin' (per-shard targets are AIMD state "
+                "over per-origin queues)"
+            )
 
     def deadline_for(self, priority: int) -> float:
         # clamp both ways: negative (more-urgent-than-interactive) classes
@@ -157,12 +170,23 @@ class AdmissionController:
         self.batch_target = int(
             min(max(self.cfg.initial_batch, self.cfg.min_batch), self.cfg.max_batch)
         )
+        # sharded data plane hooks (both optional; a plain GeoGraphStore has
+        # neither): origin->shard mapping routes per-shard batch formation,
+        # and the store's straggler detector feeds miss-cause attribution
+        self._origin_shard: Optional[Dict[int, int]] = getattr(
+            store, "origin_shard", None
+        )
+        self._straggler_det = getattr(store, "straggler", None)
+        self._targets: Dict[int, int] = {}  # shard -> AIMD target
+        self._lat_windows: Dict[int, Deque[float]] = {}  # shard -> p99 window
+        self._shard_rr = 0
+        self.straggler_misses_by_shard: Dict[int, int] = {}
         self._next_rid = 0
         self._arrival_seq = 0
         self._arrivals: List[Tuple[float, int, RequestHandle]] = []  # heap
         self._fifo: Deque[RequestHandle] = deque()
         self._queues: Dict[Tuple[int, int], Deque[RequestHandle]] = {}
-        self._rr_pos: Dict[int, int] = {}
+        self._rr_pos: Dict[object, int] = {}
         self._n_pending = 0
         self._lat_window: Deque[float] = deque(maxlen=self.cfg.latency_window)
         self._latencies: Deque[float] = deque(maxlen=self.cfg.metrics_window)
@@ -272,22 +296,48 @@ class AdmissionController:
             return self.batch_target
         return self.cfg.max_batch
 
-    def _form_batch(self, cap: int) -> List[RequestHandle]:
+    def _shard_of(self, origin: int) -> int:
+        """Shard owning an origin DC; without a sharded store every origin
+        is its own 'shard' (degenerates to per-origin AIMD)."""
+        if self._origin_shard is None:
+            return origin
+        return self._origin_shard.get(origin, origin)
+
+    def _next_shard_key(self) -> Optional[int]:
+        """Round-robin over shards that currently have pending requests."""
+        keys = sorted(
+            {self._shard_of(o) for (_, o), q in self._queues.items() if q}
+        )
+        if not keys:
+            return None
+        key = keys[self._shard_rr % len(keys)]
+        self._shard_rr += 1
+        return key
+
+    def _form_batch(
+        self, cap: int, shard_key: Optional[int] = None
+    ) -> List[RequestHandle]:
         batch: List[RequestHandle] = []
         if self.cfg.fairness == "fifo":
             while self._fifo and len(batch) < cap:
                 batch.append(self._fifo.popleft())
         else:
-            prios = sorted({p for (p, _), q in self._queues.items() if q})
+            prios = sorted({
+                p for (p, o), q in self._queues.items()
+                if q and (shard_key is None or self._shard_of(o) == shard_key)
+            })
             for prio in prios:
                 if len(batch) >= cap:
                     break
-                origins = sorted(
-                    {o for (p, o), q in self._queues.items() if p == prio and q}
-                )
+                origins = sorted({
+                    o for (p, o), q in self._queues.items()
+                    if p == prio and q
+                    and (shard_key is None or self._shard_of(o) == shard_key)
+                })
                 if not origins:
                     continue
-                start = self._rr_pos.get(prio, 0) % len(origins)
+                cursor = prio if shard_key is None else (prio, shard_key)
+                start = self._rr_pos.get(cursor, 0) % len(origins)
                 while len(batch) < cap:
                     progressed = False
                     for i in range(len(origins)):
@@ -302,7 +352,7 @@ class AdmissionController:
                     if not progressed:
                         break
                 # rotate the cursor so the next batch starts one origin over
-                self._rr_pos[prio] = start + 1
+                self._rr_pos[cursor] = start + 1
         self._n_pending -= len(batch)
         return batch
 
@@ -324,7 +374,13 @@ class AdmissionController:
         attached maintenance policy).  Returns ``[]`` with nothing pending
         and nothing scheduled."""
         self._admit_due()
-        target = self._target_size()
+        shard_key: Optional[int] = None
+        if self.cfg.per_shard_aimd and self._n_pending:
+            shard_key = self._next_shard_key()
+        if shard_key is not None:
+            target = self._targets.get(shard_key, self.batch_target)
+        else:
+            target = self._target_size()
         waiting_to_fill = (
             self.cfg.policy == "fixed"
             and self._n_pending < target
@@ -349,7 +405,7 @@ class AdmissionController:
                 self.clock.jump_to(t_next)
                 self._admit_due()
                 return []
-        batch = self._form_batch(target)
+        batch = self._form_batch(target, shard_key=shard_key)
         t0 = self.clock.now()
         try:
             results = self.store.serve_batch([(h.items, h.origin) for h in batch])
@@ -416,44 +472,73 @@ class AdmissionController:
         self._update_target(batch)
         return batch
 
-    @staticmethod
-    def _miss_cause(h: RequestHandle, t0: float, compute_s: float) -> str:
+    def _miss_cause(self, h: RequestHandle, t0: float, compute_s: float) -> str:
         """Attribute a deadline miss to the first stage that overran.
 
         ``queue``: the request was already late when dispatched;
         ``service``: dispatch + router occupancy alone blew the deadline;
         ``straggler``: only the batch's slowest WAN fetch pushed it over.
         The stages partition every miss, so cause counts sum exactly to
-        ``deadline_misses``."""
+        ``deadline_misses``.
+
+        With a sharded store, a service-stage overrun whose owning shard is
+        flagged by the store's :class:`StragglerDetector` is attributed as a
+        ``straggler`` too — the router wasn't slow in general, that shard
+        was — and either way a flagged shard's misses are tallied per shard
+        in ``straggler_misses_by_shard``."""
         if t0 - h.t_submit > h.deadline_s:
             return "queue"
-        if (t0 + compute_s) - h.t_submit > h.deadline_s:
+        det = self._straggler_det
+        shard = self._shard_of(h.origin)
+        lagging = det is not None and det.is_straggler(shard)
+        if (t0 + compute_s) - h.t_submit > h.deadline_s and not lagging:
             return "service"
+        if lagging:
+            self.straggler_misses_by_shard[shard] = (
+                self.straggler_misses_by_shard.get(shard, 0) + 1
+            )
         return "straggler"
 
     def _update_target(self, batch: List[RequestHandle]) -> None:
-        """AIMD on measured latency vs deadline slack (adaptive policy)."""
+        """AIMD on measured latency vs deadline slack (adaptive policy).
+
+        With ``per_shard_aimd`` every drain is single-shard, so the update
+        lands on that shard's own target (seeded from the global one)."""
         if self.cfg.policy != "adaptive" or not batch:
             return
+        if self.cfg.per_shard_aimd:
+            key = self._shard_of(batch[0].origin)
+            # the p99 growth gate reads this shard's own window: a slow
+            # shard's tail must not freeze the healthy shards' growth
+            win = self._lat_windows.setdefault(
+                key, deque(maxlen=self.cfg.latency_window)
+            )
+            win.extend(h.latency_s for h in batch)
+            cur = self._targets.get(key, self.batch_target)
+            self._targets[key] = self._aimd_next(cur, batch, win)
+        else:
+            self.batch_target = self._aimd_next(
+                self.batch_target, batch, self._lat_window
+            )
+
+    def _aimd_next(
+        self, cur: int, batch: List[RequestHandle], window: Deque[float]
+    ) -> int:
         cfg = self.cfg
         if any(h.deadline_missed for h in batch):
-            self.batch_target = max(cfg.min_batch, int(self.batch_target * cfg.shrink))
-            return
-        grow = min(
-            cfg.max_batch,
-            max(self.batch_target + 1, int(self.batch_target * cfg.growth)),
-        )
+            return max(cfg.min_batch, int(cur * cfg.shrink))
+        grow = min(cfg.max_batch, max(cur + 1, int(cur * cfg.growth)))
         bounded = [h for h in batch if math.isfinite(h.deadline_s)]
         if not bounded:
             # no deadline pressure: amortize overhead as hard as allowed
-            self.batch_target = grow
-            return
+            return grow
         tightest = min(h.deadline_s for h in bounded)
         slack = min(h.deadline_s - h.latency_s for h in bounded)
-        p99 = float(np.quantile(np.asarray(self._lat_window), 0.99))
+        p99 = float(np.quantile(np.asarray(window), 0.99))
         # grow while the marginal p99 stays inside the deadline slack band
         if slack > cfg.slack_frac * tightest and p99 <= (1.0 - cfg.slack_frac) * tightest:
-            self.batch_target = grow
+            return grow
+        return cur
 
     def run_until_idle(self, max_steps: int = 1_000_000) -> List[RequestHandle]:
         """Drain every pending and scheduled request; returns completions in
@@ -471,7 +556,7 @@ class AdmissionController:
         span = self._t_last_done - (
             self._t_first_submit if math.isfinite(self._t_first_submit) else 0.0
         )
-        return {
+        out = {
             "completed": self.completed,
             "deadline_misses": self.deadline_misses,
             "misses_by_cause": dict(self.misses_by_cause),
@@ -492,3 +577,11 @@ class AdmissionController:
             "served_by_origin": dict(sorted(self.served_by_origin.items())),
             "sim_time_s": self.clock.now(),
         }
+        if self.cfg.per_shard_aimd:
+            out["batch_target_by_shard"] = dict(sorted(self._targets.items()))
+        if self._straggler_det is not None:
+            out["straggler_shards"] = self._straggler_det.flagged()
+            out["straggler_misses_by_shard"] = dict(
+                sorted(self.straggler_misses_by_shard.items())
+            )
+        return out

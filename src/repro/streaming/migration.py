@@ -626,6 +626,12 @@ class WaveApplier:
                 f"remaining {self.n_remaining} waves"
             )
 
+    def check_valid(self) -> None:
+        """Raise :class:`StaleFlushError` if the id space moved under this
+        flush — for wrappers (the sharded store's transfer proxy) that must
+        refuse to ship payload for a wave whose rows are already stale."""
+        self._ensure_valid()
+
     @property
     def n_remaining(self) -> int:
         return len(self.schedule.waves) - self._wave_i

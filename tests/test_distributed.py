@@ -68,6 +68,30 @@ def test_straggler_mitigation():
     assert plan[3] in (0, 2)
 
 
+def test_straggler_detector_flags_relative_lag():
+    det = fault.StragglerDetector(4, threshold=1.8, alpha=0.5)
+    # one observed shard has no fleet to lag behind
+    det.observe(0, 1.0)
+    assert not det.is_straggler(0) and det.flagged() == []
+    for s, t in [(1, 1.0), (2, 1.1), (3, 1.0)]:
+        det.observe(s, t)
+    assert det.flagged() == []
+    # EWMA must converge past the threshold, not flag one spike
+    det.observe(3, 4.0)  # ewma: 2.5x median -> flagged
+    assert det.is_straggler(3)
+    assert det.flagged() == [3]
+    assert not det.is_straggler(0) and not det.is_straggler(1)
+    snap = det.snapshot()
+    assert snap["flagged"] == [3]
+    assert snap["median_s"] == det.median()
+    # recovery: fast observations pull the EWMA back under the bar
+    for _ in range(8):
+        det.observe(3, 1.0)
+    assert not det.is_straggler(3)
+    # out-of-range shards never flag
+    assert not det.is_straggler(-1) and not det.is_straggler(99)
+
+
 def test_mesh_env_layered_graph():
     """The mesh-level GeoEnvironment yields exactly 2 latency layers
     (ICI, DCN) when pods are present — the paper's structure at pod scale."""

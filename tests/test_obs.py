@@ -59,6 +59,56 @@ def test_counter_gauge_identity_and_snapshot():
     assert math.isnan(reg.gauge("watermark").value)
 
 
+def test_merge_folds_counters_gauges_histograms():
+    regs = [MetricsRegistry(enabled=True) for _ in range(3)]
+    rng = np.random.default_rng(0)
+    samples = []
+    for i, reg in enumerate(regs):
+        reg.counter("serving.requests").inc(10.0 * (i + 1))
+        reg.counter("hits", layer=i % 2).inc(1.0)
+        reg.gauge("watermark").set(float(i))
+        s = rng.random(500)
+        samples.append(s)
+        reg.histogram("lat", quantiles=(0.5, 0.99)).observe_many(s)
+    merged = MetricsRegistry.merge([r.snapshot() for r in regs])
+    assert merged["serving.requests"]["-"]["value"] == 60.0
+    # per-tag counters fold per tag, not globally
+    assert merged["hits"]["layer=0"]["value"] == 2.0
+    assert merged["hits"]["layer=1"]["value"] == 1.0
+    # gauges: last non-NaN wins (point-in-time reading)
+    assert merged["watermark"]["-"]["value"] == 2.0
+    h = merged["lat"]["-"]
+    allv = np.concatenate(samples)
+    assert h["count"] == len(allv)
+    assert h["sum"] == pytest.approx(allv.sum())
+    assert h["min"] == pytest.approx(allv.min())
+    assert h["max"] == pytest.approx(allv.max())
+    # count-weighted quantile fold stays near the pooled-stream quantile
+    assert h["quantiles"]["p50"] == pytest.approx(
+        np.quantile(allv, 0.5), abs=0.05
+    )
+    # the internal weighting scratch must not leak into the snapshot
+    assert "_qweight" not in h
+
+
+def test_merge_grids_disjoint_inputs_and_type_clashes():
+    a, b = MetricsRegistry(enabled=True), MetricsRegistry(enabled=True)
+    a.counter_grid("wan", axes=("src", "dst")).add(np.array([[0.0, 3.0], [0.0, 0.0]]))
+    b.counter_grid("wan", axes=("src", "dst")).add(np.array([[0.0, 1.0], [2.0, 0.0]]))
+    b.counter("only_b").inc(7.0)
+    merged = MetricsRegistry.merge([a.snapshot(), b.snapshot()])
+    assert merged["wan"]["src=0,dst=1"]["value"] == 4.0
+    assert merged["wan"]["src=1,dst=0"]["value"] == 2.0
+    # names present in only one snapshot carry through unchanged
+    assert merged["only_b"]["-"]["value"] == 7.0
+    # merging must not mutate its inputs
+    assert a.snapshot()["wan"]["src=0,dst=1"]["value"] == 3.0
+    c = MetricsRegistry(enabled=True)
+    c.gauge("only_b").set(1.0)  # same (name, tags) cell, different type
+    with pytest.raises(ValueError):
+        MetricsRegistry.merge([b.snapshot(), c.snapshot()])
+
+
 def test_counter_keyed_matches_tagged():
     reg = MetricsRegistry(enabled=True)
     key = (("layer", "2"),)

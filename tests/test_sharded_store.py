@@ -1,0 +1,394 @@
+"""Sharded data plane: ShardedGeoGraphStore differential identity.
+
+Bars under test:
+  * **identity** — a sharded store at 2/4/8 shards produces the exact
+    replica sets (``state.delta``), serving tables (partition columns ==
+    ``state.route``) and ``serve_batch`` results of a single-process
+    ``GeoGraphStore`` built from the same seed, through every mutation the
+    store supports: churn (``apply_updates``), migration waves
+    (``begin_flush``/``flush_migrations``), evictions (``maintain``),
+    deletes and compaction;
+  * **payload plane** — migration waves land as real device-to-device
+    transfers: after every wave each shard's device block holds exactly the
+    uid-derived rows for its replicas (bit-exact fp32, bounded error int8),
+    and wire bytes hit the per-shard ``MatrixCounter`` grids;
+  * **per-shard telemetry** — shard registries fold into one merged view
+    whose serving counters account for every request;
+  * **per-shard admission** — ``per_shard_aimd`` gives each shard its own
+    AIMD target (a slow shard shrinks without throttling healthy ones) and
+    a detector-flagged shard's misses are attributed ``straggler``.
+
+CI forces an 8-device CPU mesh via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; without it every
+shard cycles onto one device and the same assertions hold (single-process
+fallback).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph, build_csr
+from repro.core.latency import make_paper_env
+from repro.core.patterns import Workload, generate_khop_patterns
+from repro.core.placement import PlacementConfig
+from repro.core.routing import RouteResult
+from repro.core.store import GeoGraphStore
+from repro.distributed import ShardedGeoGraphStore, payload_for_uids
+from repro.distributed.geo_sharding import mesh_devices, mesh_env
+from repro.serve import AdmissionConfig, AdmissionController
+from repro.streaming import DeltaGraph, random_churn_batch
+
+
+# --------------------------------------------------------------- scaffolding
+def _build(seed, env, part_dcs=None):
+    """Graph + workload, independently constructible from a seed (stores
+    mutate their graph in place, so differential pairs need two builds)."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, 220, 1400)
+    dst = rng.integers(0, 220, 1400)
+    keep = src != dst
+    g = Graph.from_edges(
+        220, src[keep], dst[keep],
+        partition=rng.integers(0, part_dcs or env.n_dcs, 220),
+    )
+    csr = build_csr(g.n_nodes, g.src, g.dst, symmetrize=True)
+    pats = generate_khop_patterns(g, csr, 24, seed=seed + 1, n_dcs=env.n_dcs)
+    wl = Workload.from_patterns(pats, g.n_items, env.n_dcs)
+    return g, wl, pats
+
+
+_CFG = PlacementConfig(precache=False, dhd_steps=4)
+
+
+def _pair(seed, env, n_shards, part_dcs=None, **sharded_kw):
+    g1, wl1, pats = _build(seed, env, part_dcs)
+    g2, wl2, _ = _build(seed, env, part_dcs)
+    ref = GeoGraphStore(g1, env, wl1, config=_CFG, routing="stepwise")
+    sh = ShardedGeoGraphStore(
+        g2, env, wl2, config=_CFG, n_shards=n_shards, **sharded_kw
+    )
+    return ref, sh, pats
+
+
+def _churn(store, seed, n_batches=3, rate=0.02):
+    rng = np.random.default_rng(seed + 100)
+    store._delta_graph = DeltaGraph(store.g)
+    for _ in range(n_batches):
+        store.apply_updates(random_churn_batch(store._delta_graph, rate, rng))
+
+
+def _requests(pats, env, n, seed):
+    """65% home-origin / 35% uniform request mix."""
+    rng = np.random.default_rng(seed)
+    live = [p for p in pats if len(p.items)]
+    out = []
+    for _ in range(n):
+        p = live[int(rng.integers(0, len(live)))]
+        home = int(np.argmax(p.r_py))
+        o = home if rng.random() < 0.65 else int(rng.integers(0, env.n_dcs))
+        out.append((p.items, o))
+    return out
+
+
+def _assert_results_equal(r1, r2):
+    assert len(r1) == len(r2)
+    for a, b in zip(r1, r2):
+        assert np.array_equal(a.served_by, b.served_by)
+        assert a.latency_s == b.latency_s  # float-identical, not approx
+        assert a.wan_bytes == b.wan_bytes
+        assert a.layers_used == b.layers_used
+        assert a.n_missing == b.n_missing
+        assert set(a.dcs.tolist()) == set(b.dcs.tolist())
+
+
+def _assert_state_parity(ref, sh):
+    assert np.array_equal(ref.state.delta, sh.state.delta)
+    assert np.array_equal(ref.state.route, sh.route_table())
+    assert np.array_equal(ref.state.route, sh.state.route)
+    assert sh.verify_partitions()
+
+
+def _tight_window(store, n_items_per_wave=3.0):
+    med = float(np.median(store.g.item_size()))
+    return n_items_per_wave * med / float(store.env.bw_Bps_safe().min())
+
+
+# ---------------------------------------------------------- identity: mesh
+@pytest.mark.parametrize("n_shards", [2, 4, 8])
+def test_mesh_identity_across_shard_counts(n_shards):
+    """Same env served at 2/4/8 shards == the single-process store."""
+    env = mesh_env(8, shards_per_pod=4)
+    ref, sh, pats = _pair(20, env, n_shards)
+    _assert_state_parity(ref, sh)
+    reqs = _requests(pats, env, 96, seed=21)
+    _assert_results_equal(ref.serve_batch(reqs), sh.serve_batch(reqs))
+    # heat observation paths must match too: both stores plan identically
+    _churn(ref, 22), _churn(sh, 22)
+    _assert_state_parity(ref, sh)
+    _assert_results_equal(ref.serve_batch(reqs), sh.serve_batch(reqs))
+
+
+def test_mesh_devices_cycle_and_mesh_serving():
+    devs = mesh_devices(8)
+    assert len(devs) == 8
+    # a 3-shard store on an 8-DC mesh groups DCs round-robin
+    env = mesh_env(8, shards_per_pod=4)
+    _, sh, pats = _pair(30, env, n_shards=3)
+    assert sh.origin_shard == {d: d % 3 for d in range(8)}
+    assert sorted(d for s in sh.shards for d in s.dcs) == list(range(8))
+    r = sh.serve_batch(_requests(pats, env, 32, seed=31))
+    assert all(isinstance(x, RouteResult) for x in r)
+
+
+# ------------------------------------------- identity: full mutation cycle
+@pytest.mark.parametrize("n_shards,compress", [(2, "int8"), (5, None)])
+def test_identity_through_churn_flush_maintain_compact(n_shards, compress):
+    env = make_paper_env()
+    # partition over D-1 DCs so migration finds profitable adds
+    ref, sh, pats = _pair(
+        6, env, n_shards, part_dcs=env.n_dcs - 1,
+        telemetry=True, compress=compress,
+    )
+    _churn(ref, 6), _churn(sh, 6)
+    _assert_state_parity(ref, sh)
+    assert sh.verify_payloads() == 0.0
+
+    kw = dict(theta_add=0.3, theta_drop=0.15)
+    window = _tight_window(ref)
+    p1 = ref.flush_migrations(window_s=window, **kw)
+    p2 = sh.flush_migrations(window_s=window, **kw)
+    assert p1.n_adds == p2.n_adds > 0  # waves actually shipped payload
+    assert p1.schedule.n_waves == p2.schedule.n_waves >= 1
+    _assert_state_parity(ref, sh)
+    tol = 0.0 if compress is None else 1.0 / 127.0
+    assert sh.verify_payloads() <= tol
+
+    reqs = _requests(pats, env, 64, seed=61)
+    _assert_results_equal(ref.serve_batch(reqs), sh.serve_batch(reqs))
+
+    ref.maintain(), sh.maintain()
+    _assert_state_parity(ref, sh)
+    assert sh.verify_payloads() <= tol
+
+    ids = np.arange(0, ref.g.n_items, 5)
+    ref.delete_items(ids), sh.delete_items(ids)
+    fired = (ref.compact(), sh.compact())
+    assert fired[0] == fired[1]
+    _assert_state_parity(ref, sh)
+    # compaction re-materializes payloads from the surviving uids: exact
+    assert sh.verify_payloads() == 0.0
+    reqs2 = [(np.clip(it, 0, ref.g.n_items - 1), o) for it, o in reqs]
+    _assert_results_equal(ref.serve_batch(reqs2), sh.serve_batch(reqs2))
+
+    bytes_moved = sum(
+        v["value"]
+        for v in sh.merged_metrics()
+        .get("migration.device_bytes_link", {})
+        .values()
+    )
+    if compress is None:
+        # fp32 wire bytes == adds x row width x 4B, exactly
+        assert bytes_moved == p2.n_adds * sh.payload_width * 4
+    else:
+        assert 0 < bytes_moved < p2.n_adds * sh.payload_width * 4
+
+
+def test_wavewise_payload_invariant_and_stepwise_applier():
+    """After *every* wave the held rows of every shard match their uid
+    content — transfers land with the metadata patch, not at finish."""
+    env = make_paper_env()
+    ref, sh, _ = _pair(7, env, n_shards=3, part_dcs=env.n_dcs - 1,
+                       telemetry=True)
+    _churn(ref, 7), _churn(sh, 7)
+    kw = dict(theta_add=0.3, theta_drop=0.15)
+    window = _tight_window(ref)
+    p1, a1 = ref.begin_flush(window_s=window, **kw)
+    p2, a2 = sh.begin_flush(window_s=window, **kw)
+    if a1.n_remaining < 2:
+        pytest.skip("plan produced fewer than 2 transfer waves")
+    assert a2.n_remaining == a1.n_remaining
+    while a2.n_remaining:
+        w1, w2 = a1.apply_next(), a2.apply_next()
+        assert [(b.src, b.dst, b.items.tolist()) for b in w1.links] == [
+            (b.src, b.dst, b.items.tolist()) for b in w2.links
+        ]
+        assert sh.verify_payloads() == 0.0
+        assert np.array_equal(ref.state.route, sh.route_table())
+    a1.finish(), a2.finish()
+    _assert_state_parity(ref, sh)
+    assert sh.verify_payloads() == 0.0
+    waves = sh.registry.snapshot()["migration.device_waves"]["-"]["value"]
+    assert waves == p2.schedule.n_waves
+
+
+def test_insert_patterns_rebinds_partitions_and_payload():
+    env = mesh_env(4)
+    ref, sh, pats = _pair(40, env, n_shards=2)
+
+    def fresh(store):  # same graph content on both sides -> same patterns
+        csr = build_csr(store.g.n_nodes, store.g.src, store.g.dst,
+                        symmetrize=True)
+        return generate_khop_patterns(store.g, csr, 10, seed=41,
+                                      n_dcs=env.n_dcs)
+
+    ref_new, sh_new = fresh(ref), fresh(sh)
+    # full re-place builds a brand-new RouteIndex: the facade must re-bind
+    ref.insert_patterns(ref_new[:6]), sh.insert_patterns(sh_new[:6])
+    _assert_state_parity(ref, sh)
+    assert sh.verify_payloads() == 0.0
+    ref.insert_patterns_incremental(ref_new[6:10])
+    sh.insert_patterns_incremental(sh_new[6:10])
+    _assert_state_parity(ref, sh)
+    reqs = _requests(pats, env, 48, seed=42)
+    _assert_results_equal(ref.serve_batch(reqs), sh.serve_batch(reqs))
+
+
+def test_parallel_dispatch_matches_serial():
+    env = mesh_env(8, shards_per_pod=4)
+    _, serial, pats = _pair(50, env, n_shards=4, parallel=False)
+    _, threaded, _ = _pair(50, env, n_shards=4, parallel=True)
+    assert threaded._pool is not None
+    reqs = _requests(pats, env, 128, seed=51)
+    _assert_results_equal(serial.serve_batch(reqs), threaded.serve_batch(reqs))
+    for o in range(env.n_dcs):
+        assert np.array_equal(serial.caches[o].heat, threaded.caches[o].heat)
+
+
+def test_constructor_rejects_bad_configs():
+    env = mesh_env(4)
+    g, wl, _ = _build(60, env)
+    with pytest.raises(ValueError, match="route index"):
+        ShardedGeoGraphStore(g, env, wl, config=_CFG, routing="flat")
+    with pytest.raises(ValueError, match="n_shards"):
+        ShardedGeoGraphStore(g, env, wl, config=_CFG, n_shards=9)
+    with pytest.raises(ValueError, match="compression"):
+        ShardedGeoGraphStore(g, env, wl, config=_CFG, compress="zstd")
+
+
+def test_payload_for_uids_stable_and_bounded():
+    rows = payload_for_uids(np.array([0, 1, 2**40, 7]), width=4)
+    assert rows.shape == (4, 4) and rows.dtype == np.float32
+    assert (0 <= rows).all() and (rows < 1).all()
+    # pure function of uid: permutation-covariant, no hidden state
+    perm = payload_for_uids(np.array([7, 0]), width=4)
+    assert np.array_equal(perm[0], rows[3]) and np.array_equal(perm[1], rows[0])
+
+
+# ------------------------------------------------------------------ metrics
+def test_merged_metrics_account_every_request():
+    env = mesh_env(8, shards_per_pod=4)
+    _, sh, pats = _pair(70, env, n_shards=4, telemetry=True)
+    reqs = _requests(pats, env, 80, seed=71)
+    sh.serve_batch(reqs)
+    sh.serve_batch(reqs[:20])
+    merged = sh.merged_metrics()
+    assert merged["serving.requests"]["-"]["value"] == 100.0
+    # per-shard registries really are per-shard: each holds only its slice
+    per_shard = [
+        s.registry.snapshot()
+        .get("serving.requests", {})
+        .get("-", {})
+        .get("value", 0.0)
+        for s in sh.shards
+    ]
+    assert sum(per_shard) == 100.0
+    assert sum(1 for v in per_shard if v) > 1
+    lat = merged["serving.request_latency_s"]["-"]
+    assert lat["count"] == 100.0
+    # fetch path: serving the same batch with payload reads changes no result
+    sh.fetch_payload = True
+    r = sh.serve_batch(reqs[:8], observe=False)
+    assert len(r) == 8
+
+
+# --------------------------------------------------- per-shard admission
+class _StubShardStore:
+    """Two-shard data plane stub with a controllable slow shard: shard 1's
+    serve wall time is fed to the detector exactly as the sharded store
+    feeds measured times."""
+
+    def __init__(self, slow_factor=10.0):
+        from repro.distributed.fault import StragglerDetector
+
+        self.origin_shard = {0: 0, 1: 1}
+        self.straggler = StragglerDetector(2, threshold=1.8)
+        self.slow_factor = slow_factor
+
+    def serve_batch(self, reqs):
+        out = []
+        for items, origin in reqs:
+            shard = self.origin_shard[origin]
+            base = 0.002 if shard == 0 else 0.002 * self.slow_factor
+            self.straggler.observe(shard, base)
+            out.append(
+                RouteResult(
+                    served_by=np.zeros(len(items), dtype=np.int64),
+                    dcs=np.array([origin]),
+                    latency_s=base,
+                    per_dc_latency={origin: base},
+                    layers_used=0,
+                    n_missing=0,
+                    wan_bytes=0.0,
+                )
+            )
+        return out
+
+
+def test_per_shard_aimd_isolates_slow_shard():
+    cfg = AdmissionConfig(
+        per_shard_aimd=True, initial_batch=4, max_batch=64,
+        default_deadlines=(0.012,),
+    )
+    ctl = AdmissionController(_StubShardStore(slow_factor=20.0), cfg)
+    rng = np.random.default_rng(0)
+    # arrivals slower than the service rate: the healthy shard must never
+    # miss (so its target grows) while the slow shard's straggler always
+    # blows the deadline (so its own target shrinks)
+    for i in range(200):
+        ctl.submit(np.arange(3), origin=int(rng.integers(0, 2)), at=1e-3 * i)
+    ctl.run_until_idle()
+    m = ctl.metrics()
+    assert m["completed"] == 200
+    assert sum(m["misses_by_cause"].values()) == m["deadline_misses"]
+    targets = m["batch_target_by_shard"]
+    assert set(targets) == {0, 1}
+    # the slow shard shrank its own target; the healthy shard kept growing
+    assert targets[1] < targets[0]
+    assert targets[0] > cfg.initial_batch
+    # a detector-flagged shard's misses are attributed to the straggler
+    assert 1 in m["straggler_shards"]
+    assert m["straggler_misses_by_shard"].get(1, 0) > 0
+    assert m["misses_by_cause"]["straggler"] >= m[
+        "straggler_misses_by_shard"
+    ][1]
+
+
+def test_per_shard_aimd_config_validation():
+    with pytest.raises(ValueError, match="per_shard_aimd"):
+        AdmissionConfig(per_shard_aimd=True, policy="greedy")
+    with pytest.raises(ValueError, match="per_shard_aimd"):
+        AdmissionConfig(per_shard_aimd=True, fairness="fifo")
+
+
+def test_controller_drives_sharded_store_end_to_end():
+    """The full loop: controller -> sharded serve -> straggler feed ->
+    per-shard targets, against the real data plane."""
+    env = mesh_env(8, shards_per_pod=4)
+    _, sh, pats = _pair(80, env, n_shards=4, telemetry=True)
+    ctl = AdmissionController(
+        sh, AdmissionConfig(per_shard_aimd=True, initial_batch=4, max_batch=32)
+    )
+    reqs = _requests(pats, env, 120, seed=81)
+    for i, (items, o) in enumerate(reqs):
+        ctl.submit(items, o, at=2e-4 * i)
+    done = ctl.run_until_idle()
+    assert len(done) == 120
+    m = ctl.metrics()
+    assert m["completed"] == 120
+    assert sum(m["misses_by_cause"].values()) == m["deadline_misses"]
+    assert set(m["batch_target_by_shard"]) <= set(range(4))
+    # the real store fed the detector one EWMA per serving shard
+    assert (sh.straggler.lat > 0).sum() == len(m["batch_target_by_shard"])
+    merged = sh.merged_metrics()
+    assert merged["serving.requests"]["-"]["value"] == 120.0
