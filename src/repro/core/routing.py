@@ -28,6 +28,9 @@ from .layered_graph import LayeredGraph
 
 __all__ = [
     "RouteResult",
+    "RouteFastConfig",
+    "get_route_fast_config",
+    "set_route_fast_config",
     "route_online",
     "route_online_batch",
     "OfflineLayout",
@@ -47,16 +50,143 @@ def _layer_tags(layer: int) -> Tuple[Tuple[str, str], ...]:
     return key
 
 
-# ------------------------------------------------------------------- online
+class _ObsHandles:
+    """Pre-resolved serving/routing instruments for one registry.
+
+    The batch serve path books ~a dozen instruments per call; resolving
+    each through the registry's keyed lookup costs more than the increment
+    itself.  Handles are memoized in the registry's ``_handle_cache`` (so
+    ``clear()`` drops them with the instruments; ``reset()`` keeps the
+    instrument objects, so handles survive it)."""
+
+    __slots__ = (
+        "requests", "wan", "lat", "grid", "kernel_time", "unresolved",
+        "layer_hits", "layer_time", "_reg",
+    )
+
+    def __init__(self, reg):
+        self._reg = reg
+        self.requests = reg.counter_keyed("serving.requests", ())
+        self.wan = reg.counter_keyed("serving.wan_bytes", ())
+        self.lat = reg.histogram(
+            "serving.request_latency_s", quantiles=(0.5, 0.99)
+        )
+        self.grid = reg.counter_grid("serving.wan_bytes_link", ("src", "dst"))
+        self.kernel_time = reg.counter_keyed("routing.kernel_time_s", ())
+        self.unresolved = reg.counter_keyed("routing.unresolved_items", ())
+        self.layer_hits: dict = {}
+        self.layer_time: dict = {}
+
+    def hits(self, layer: int):
+        c = self.layer_hits.get(layer)
+        if c is None:
+            c = self._reg.counter_keyed("routing.layer_hits", _layer_tags(layer))
+            self.layer_hits[layer] = c
+        return c
+
+    def layer_s(self, layer: int):
+        c = self.layer_time.get(layer)
+        if c is None:
+            c = self._reg.counter_keyed(
+                "routing.layer_time_s", _layer_tags(layer)
+            )
+            self.layer_time[layer] = c
+        return c
+
+
+def _obs_handles(reg) -> _ObsHandles:
+    h = reg._handle_cache.get("routing")
+    if h is None:
+        h = _ObsHandles(reg)
+        reg._handle_cache["routing"] = h
+    return h
+
+
+# --------------------------------------------------------- fast-path config
 @dataclasses.dataclass
+class RouteFastConfig:
+    """Eligibility gates for the fused jax/Pallas batch expansion.
+
+    The fast path pays fixed per-call costs (host->device transfer of the
+    packed batch, jit dispatch), so small batches stay on the numpy path;
+    the size gates also bound the padded ``[R, Kmax]`` buffers the packing
+    allocates.  ``max_dcs`` is the int32 replica-bitmask budget (bit 31 is
+    the sign bit)."""
+
+    enabled: bool = True
+    min_requests: int = 64  # below this the numpy lockstep loop wins
+    max_kmax: int = 8192  # widest request (items) eligible for packing
+    max_cells: int = 1 << 23  # padded R * Kmax budget (~32 MB of int32)
+    max_dcs: int = 31
+
+
+_FAST_CONFIG = RouteFastConfig()
+
+
+def get_route_fast_config() -> RouteFastConfig:
+    return _FAST_CONFIG
+
+
+def set_route_fast_config(config: RouteFastConfig) -> RouteFastConfig:
+    global _FAST_CONFIG
+    _FAST_CONFIG = config
+    return config
+
+
+# ------------------------------------------------------------------- online
 class RouteResult:
-    served_by: np.ndarray  # [len(items)] serving DC per item (-1 unresolved)
-    dcs: np.ndarray  # distinct participating DCs
-    latency_s: float  # straggler latency (max over DCs, Eq. 1)
-    per_dc_latency: Dict[int, float]
-    layers_used: int
-    n_missing: int
-    wan_bytes: float = 0.0  # bytes served by non-origin DCs (WAN traffic)
+    """Routing outcome for one request.
+
+    A ``__slots__`` class rather than a dataclass: the batch path
+    materializes one of these per request per serve call, and
+    ``per_dc_latency`` — only read by diagnostics and tests — builds its
+    dict lazily from the packed ``(dcs, pair_latency)`` columns.
+    """
+
+    __slots__ = (
+        "served_by",
+        "dcs",
+        "latency_s",
+        "layers_used",
+        "n_missing",
+        "wan_bytes",
+        "_per_dc",
+        "_pair_lat",
+    )
+
+    def __init__(
+        self,
+        served_by: np.ndarray,  # [len(items)] serving DC per item (-1 open)
+        dcs: np.ndarray,  # distinct participating DCs
+        latency_s: float,  # straggler latency (max over DCs, Eq. 1)
+        per_dc_latency: Optional[Dict[int, float]] = None,
+        layers_used: int = 0,
+        n_missing: int = 0,
+        wan_bytes: float = 0.0,  # bytes served by non-origin DCs (WAN)
+        pair_latency: Optional[List[float]] = None,  # aligned with dcs
+    ) -> None:
+        self.served_by = served_by
+        self.dcs = dcs
+        self.latency_s = latency_s
+        self.layers_used = layers_used
+        self.n_missing = n_missing
+        self.wan_bytes = wan_bytes
+        self._per_dc = per_dc_latency
+        self._pair_lat = pair_latency
+
+    @property
+    def per_dc_latency(self) -> Dict[int, float]:
+        if self._per_dc is None:
+            lats = self._pair_lat if self._pair_lat is not None else ()
+            self._per_dc = dict(zip([int(d) for d in self.dcs], lats))
+        return self._per_dc
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"RouteResult(dcs={list(map(int, self.dcs))}, "
+            f"latency_s={self.latency_s:.6g}, layers_used={self.layers_used}, "
+            f"n_missing={self.n_missing}, wan_bytes={self.wan_bytes:.6g})"
+        )
 
 
 def route_online(
@@ -146,7 +276,7 @@ def _expand_single_origin(
     idx = np.where(~local)[0]  # flat positions still missing
     if obs:
         unresolved = len(idx)
-        reg.counter_keyed("routing.layer_hits", _layer_tags(0)).inc(K - unresolved)
+        _obs_handles(reg).hits(0).inc(K - unresolved)
     for layer in range(1, lg.n_layers + 1):
         if len(idx) == 0:
             break
@@ -176,15 +306,209 @@ def _expand_single_origin(
                 served[idx[hit]] = cluster[best_j[rid[hit]]]
                 idx = idx[~hit]
         if obs:
-            reg.counter_keyed("routing.layer_time_s", _layer_tags(layer)).inc(
-                time.perf_counter() - t_layer
-            )
-            reg.counter_keyed("routing.layer_hits", _layer_tags(layer)).inc(
-                unresolved - len(idx)
-            )
+            h = _obs_handles(reg)
+            h.layer_s(layer).inc(time.perf_counter() - t_layer)
+            h.hits(layer).inc(unresolved - len(idx))
             unresolved = len(idx)
     if obs:
-        reg.counter_keyed("routing.unresolved_items", ()).inc(len(idx))
+        _obs_handles(reg).unresolved.inc(len(idx))
+
+
+def _observe_scalar(
+    reg,
+    lg: LayeredGraph,
+    res: RouteResult,
+    items: np.ndarray,
+    origin: int,
+    sizes: np.ndarray,
+    elapsed_s: float,
+) -> None:
+    """Book the batch path's serving/routing instruments for one scalar
+    :func:`route_online` result, so size-1 batches can take the (faster)
+    scalar router without losing accounting parity.
+
+    The serving layer of each assignment is recovered instead of re-walking
+    the expansion: greedy passes only break when *no* cluster DC covers any
+    missing item, so an item is always served at the first layer whose
+    cluster holds a replica — i.e. the first layer where its assigned DC
+    shares a component with the origin.  Expansion time is charged to the
+    deepest layer used (the scalar router doesn't time layers separately).
+    """
+    h = _obs_handles(reg)
+    h.requests.inc(1)
+    served = res.served_by
+    hits0 = int((served == origin).sum())
+    if hits0:
+        h.hits(0).inc(hits0)
+    wan_link = None
+    for dc in res.dcs.tolist():
+        dc = int(dc)
+        if dc == origin:
+            continue
+        shared = lg.comp_of_dc[1:, dc] == lg.comp_of_dc[1:, origin]
+        layer = int(np.argmax(shared)) + 1
+        h.hits(layer).inc(int((served == dc).sum()))
+        if wan_link is None:
+            wan_link = np.zeros((lg.env.n_dcs, lg.env.n_dcs))
+        wan_link[dc, origin] += float(sizes[items[served == dc]].sum())
+    if res.layers_used > 0:
+        h.layer_s(res.layers_used).inc(elapsed_s)
+    h.unresolved.inc(res.n_missing)
+    h.lat.observe(res.latency_s)
+    h.wan.inc(res.wan_bytes)
+    if wan_link is not None:
+        h.grid.add(wan_link)
+
+
+# jax + kernels are imported lazily on the first fast-path call: the numpy
+# router must keep working (and importing fast) when jax is unavailable
+_KOPS = None
+_KOPS_FAILED = False
+
+
+def _get_kops():
+    global _KOPS, _KOPS_FAILED
+    if _KOPS is None and not _KOPS_FAILED:
+        try:
+            from ..kernels import autotune, ops
+
+            _KOPS = (ops, autotune)
+        except Exception:  # pragma: no cover - jax-less deployment
+            _KOPS_FAILED = True
+    return _KOPS
+
+
+def _fast_eligible(
+    fast: Optional[bool], config: RouteFastConfig, R: int, D: int, kmax: int,
+    n_layers: int,
+) -> bool:
+    if fast is False or not config.enabled or kmax == 0:
+        return False
+    if D > config.max_dcs or n_layers > 64:
+        return False  # int32 bitmask / stats-lane budget
+    if fast is not True:  # default: size heuristics decide
+        if R < config.min_requests:
+            return False
+        if kmax > config.max_kmax or R * kmax > config.max_cells:
+            return False
+    return _get_kops() is not None
+
+
+# per-LayeredGraph device copies of the expansion constants (layer
+# components, RTT, 1/bandwidth): host->device conversion has a fixed ~70us
+# cost per array, which the per-batch fast path cannot afford for arrays
+# that never change.  Keyed on id(lg) with the lg kept referenced, so a
+# live entry's key cannot be recycled; one entry suffices (one store per
+# process; shards share the lg).
+_FAST_ENV_CACHE: Dict[int, Tuple[LayeredGraph, tuple]] = {}
+
+
+def _fast_env_arrays(lg: LayeredGraph) -> tuple:
+    hit = _FAST_ENV_CACHE.get(id(lg))
+    if hit is not None:
+        return hit[1]
+    import jax.numpy as jnp
+
+    arrs = (
+        jnp.asarray(lg.comp_of_dc, jnp.int32),
+        jnp.asarray(lg.env.rtt_s, jnp.float32),
+        jnp.asarray(1.0 / lg.env.bw_Bps_safe(), jnp.float32),
+    )
+    _FAST_ENV_CACHE.clear()
+    _FAST_ENV_CACHE[id(lg)] = (lg, arrs)
+    return arrs
+
+
+def _route_batch_fast(
+    lg: LayeredGraph,
+    delta_all: np.ndarray,  # [K, D] replica rows for the flat item stream
+    sizes_all: np.ndarray,  # [K] item bytes, flat
+    req_id: np.ndarray,  # [K] request id per flat item
+    bounds: np.ndarray,  # [R + 1] request offsets into the flat stream
+    lens: np.ndarray,  # [R]
+    origin: np.ndarray,  # [R]
+    reg,
+    obs: bool,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Fused expansion for the whole batch on the kernels fast path.
+
+    Bit-packs the batch's replica rows (bit d = replica at DC d) and
+    dispatches the autotuned winner for ``(r_pad, k_pad, D, L)``: the
+    subset-histogram router (``kernels.ops.route_expand_subsets`` — CPU
+    default for small DC counts, per-pass work independent of the item
+    count), or a ``[R, Kmax]`` int32 tile through
+    ``kernels.ops.route_expand_batch`` (Pallas kernel on TPU, jitted oracle
+    otherwise).  Every impl produces the numpy router's exact greedy picks.
+    Tile rows and item slots are padded to power-of-two buckets so the jit
+    cache is keyed on a handful of shapes across the batch mix.  Returns
+    ``(served [K], layers_used [R])``; all byte/latency folds are recomputed
+    exactly on the host by the shared epilogue, so results are bit-identical
+    to the numpy path.
+    """
+    ops, autotune = _get_kops()
+    R = len(lens)
+    K = delta_all.shape[0]
+    D = delta_all.shape[1]
+    t0 = time.perf_counter() if obs else 0.0
+    kmax = int(lens.max())
+    k_pad = autotune.shape_bucket(kmax, floor=8)
+    r_pad = autotune.shape_bucket(R, floor=8)
+    if D <= 23:
+        # BLAS bit-pack: bool @ f32 powers of two; every bitmask value is an
+        # exact f32 integer below 2^24
+        bits_flat = (
+            delta_all @ (1 << np.arange(D)).astype(np.float32)
+        ).astype(np.int32)
+    else:
+        bits_flat = (
+            delta_all.astype(np.int64) @ (1 << np.arange(D, dtype=np.int64))
+        ).astype(np.int32)
+    cfg = autotune.get_autotuner().lookup(
+        "route_expand", (r_pad, k_pad, D, lg.n_layers)
+    ) or {}
+    impl = cfg.get("impl")
+    if impl is None:
+        on_tpu = ops.on_tpu()
+        impl = (
+            "kernel" if on_tpu
+            else "subsets" if D <= ops.SUBSET_MAX_DCS
+            else "ref"
+        )
+    if impl == "subsets" and D <= ops.SUBSET_MAX_DCS:
+        served, layers_used, miss_after = ops.route_expand_subsets(
+            bits_flat, req_id, R, origin, lg.comp_of_dc
+        )
+    else:
+        pos = np.arange(K, dtype=np.int64) - bounds[req_id]
+        bits = np.zeros((r_pad, k_pad), np.int32)
+        bits[req_id, pos] = bits_flat
+        szp = np.zeros((r_pad, k_pad), np.float32)
+        szp[req_id, pos] = sizes_all
+        lens_p = np.zeros(r_pad, np.int32)
+        lens_p[:R] = lens
+        origin_p = np.zeros(r_pad, np.int32)
+        origin_p[:R] = origin
+        comp, rtt, ibw = _fast_env_arrays(lg)
+        served_p, _, layers_used, miss_after, _, _ = ops.route_expand_batch(
+            bits, szp, lens_p, origin_p, comp, rtt, ibw,
+            use_kernel=impl == "kernel",
+            block_r=int(cfg.get("block_r", 128)),
+        )
+        served = served_p[req_id, pos].astype(np.int64)
+    if obs:
+        h = _obs_handles(reg)
+        h.kernel_time.inc(time.perf_counter() - t0)
+        # per-layer resolved counts from the kernel's missing-after-layer
+        # columns (early-exited layers report 0 missing, which telescopes
+        # to zero extra hits)
+        miss_tot = miss_after[:R].sum(axis=0).tolist()
+        h.hits(0).inc(K - int(miss_tot[0]))
+        for layer in range(1, len(miss_tot)):
+            hits = int(miss_tot[layer - 1]) - int(miss_tot[layer])
+            if hits:
+                h.hits(layer).inc(hits)
+        h.unresolved.inc(int(miss_tot[-1]))
+    return served, layers_used[:R].astype(np.int64)
 
 
 def route_online_batch(
@@ -193,6 +517,7 @@ def route_online_batch(
     requests: Sequence[Tuple[np.ndarray, int]],
     sizes: Optional[np.ndarray] = None,
     registry=None,
+    fast: Optional[bool] = None,
 ) -> List[RouteResult]:
     """Bottom-up expanding retrieval for a whole request batch at once.
 
@@ -208,6 +533,12 @@ def route_online_batch(
     per-shard sub-batches) takes :func:`_expand_single_origin` instead of
     the lockstep loop — same results, less work per pass.
 
+    ``fast`` pins the fused jax/Pallas expansion (:mod:`repro.kernels`):
+    ``True`` forces it, ``False`` forbids it, ``None`` (default) lets
+    :class:`RouteFastConfig` size gates decide.  The fast path computes the
+    same greedy picks on device and re-folds bytes/latency on the host in
+    f64, so its results are bit-identical to the numpy path.
+
     ``registry`` routes serving/routing telemetry into an explicit
     :class:`~repro.obs.MetricsRegistry` (a shard's private registry);
     ``None`` falls back to the process default.
@@ -217,41 +548,65 @@ def route_online_batch(
     if R == 0:
         return []
     reg = registry if registry is not None else get_registry()
-    if R == 1 and not reg.enabled:
+    if R == 1:
         # size-1 fast path: the flat batch machinery (request-id bookkeeping,
-        # [R, D] coverage stacks) costs ~2x the scalar router at R == 1
-        # (BENCH_serving batch-1 speedup was 0.48) and the scalar path is
-        # definitionally request-identical.  With telemetry enabled the
-        # batch path runs even at R == 1 so every served request is counted
-        # (the sharded store's per-shard registries must account exactly).
-        items, origin = requests[0]
-        return [route_online(lg, state, np.asarray(items), int(origin), sizes=sizes)]
+        # [R, D] coverage stacks) costs ~2x the scalar router at R == 1 and
+        # the scalar path is definitionally request-identical.  With
+        # telemetry enabled, _observe_scalar books the batch path's exact
+        # instruments from the scalar result (the sharded store's per-shard
+        # registries must account every request).
+        items, origin_0 = requests[0]
+        items = np.asarray(items)
+        if sizes is None:
+            sizes = lg.g.item_size()
+        t0 = time.perf_counter() if reg.enabled else 0.0
+        res = route_online(lg, state, items, int(origin_0), sizes=sizes)
+        if reg.enabled:
+            _observe_scalar(
+                reg, lg, res, items, int(origin_0), sizes,
+                time.perf_counter() - t0,
+            )
+        return [res]
     if sizes is None:
         sizes = lg.g.item_size()
-    lens = np.asarray([len(np.asarray(it)) for it, _ in requests], dtype=np.int64)
-    origin = np.asarray([int(o) for _, o in requests], dtype=np.int64)
+    arrs = [np.asarray(it) for it, _ in requests]
+    lens = np.fromiter((a.shape[0] for a in arrs), dtype=np.int64, count=R)
+    origin = np.fromiter((o for _, o in requests), dtype=np.int64, count=R)
     items_all = (
-        np.concatenate([np.asarray(it, dtype=np.int64) for it, _ in requests])
+        np.concatenate(arrs).astype(np.int64, copy=False)
         if lens.sum()
         else np.zeros(0, dtype=np.int64)
     )
     req_id = np.repeat(np.arange(R, dtype=np.int64), lens)
     K = len(items_all)
-    ar_K = np.arange(K)
-    ar_R = np.arange(R)
-    served = np.full(K, -1, dtype=np.int64)
-    layers_used = np.zeros(R, dtype=np.int64)
     D = env.n_dcs
-    # one gather of the batch's replica rows; every greedy pass reuses it
+    bounds = np.concatenate([[0], np.cumsum(lens)])
+    # one gather each of the batch's replica rows and item bytes; every
+    # greedy pass and the shared epilogue reuse them
     delta_all = state.delta[items_all]  # [K, D]
-    org_all = origin[req_id]
+    sz_all = sizes[items_all]  # [K] f64
 
     # coverage telemetry: per-layer resolved-item counters + expansion
     # timing, all gated so the disabled path costs one attribute load
     obs = reg.enabled
     if obs:
-        reg.counter_keyed("serving.requests", ()).inc(R)
+        _obs_handles(reg).requests.inc(R)
 
+    kmax = int(lens.max()) if R else 0
+    if _fast_eligible(fast, _FAST_CONFIG, R, D, kmax, lg.n_layers):
+        served, layers_used = _route_batch_fast(
+            lg, delta_all, sz_all, req_id, bounds, lens, origin, reg, obs,
+        )
+        return _materialize_results(
+            env, sz_all, req_id, bounds, origin, served,
+            layers_used, R, D, reg, obs,
+        )
+
+    ar_K = np.arange(K)
+    ar_R = np.arange(R)
+    served = np.full(K, -1, dtype=np.int64)
+    layers_used = np.zeros(R, dtype=np.int64)
+    org_all = origin[req_id]
     if (origin == origin[0]).all():
         _expand_single_origin(
             lg, delta_all, req_id, R, int(origin[0]), served, layers_used, reg, obs
@@ -264,7 +619,7 @@ def route_online_batch(
         missing_per_req = np.bincount(req_id[served < 0], minlength=R)
         if obs:
             unresolved = int(missing_per_req.sum())
-            reg.counter_keyed("routing.layer_hits", _layer_tags(0)).inc(K - unresolved)
+            _obs_handles(reg).hits(0).inc(K - unresolved)
         for layer in range(1, lg.n_layers + 1):
             active = missing_per_req > 0
             if not active.any():
@@ -309,24 +664,53 @@ def route_online_batch(
                 # layer_hits' batch count): a scalar histogram observe costs
                 # ~10us in P² marker maths, which the 5% serving budget
                 # cannot spare
-                reg.counter_keyed("routing.layer_time_s", _layer_tags(layer)).inc(
-                    time.perf_counter() - t_layer
-                )
+                h = _obs_handles(reg)
+                h.layer_s(layer).inc(time.perf_counter() - t_layer)
                 now_unresolved = int(missing_per_req.sum())
-                reg.counter_keyed("routing.layer_hits", _layer_tags(layer)).inc(
-                    unresolved - now_unresolved
-                )
+                h.hits(layer).inc(unresolved - now_unresolved)
                 unresolved = now_unresolved
 
         if obs:
-            reg.counter_keyed("routing.unresolved_items", ()).inc(unresolved)
+            _obs_handles(reg).unresolved.inc(unresolved)
 
-    # resolved latency per (request, DC): served bytes -> Eq. 1, vectorized
+    return _materialize_results(
+        env, sz_all, req_id, bounds, origin, served, layers_used,
+        R, D, reg, obs,
+    )
+
+
+def _materialize_results(
+    env: GeoEnvironment,
+    sz_all: np.ndarray,  # [K] item bytes for the flat stream, f64
+    req_id: np.ndarray,  # [K]
+    bounds: np.ndarray,  # [R + 1] request offsets into the flat stream
+    origin: np.ndarray,  # [R]
+    served: np.ndarray,  # [K] serving DC per flat item (-1 unresolved)
+    layers_used: np.ndarray,  # [R]
+    R: int,
+    D: int,
+    reg,
+    obs: bool,
+) -> List[RouteResult]:
+    """Shared exact epilogue: fold served assignments into Eq. 1 latency,
+    WAN bytes and per-request :class:`RouteResult`\\ s, entirely in host
+    f64.  Both the numpy expansion and the jax fast path feed this from
+    their (integer, identical) ``served`` picks, which is what makes the
+    fast path bit-identical — f32 device byte sums never leak into results.
+    """
+    ar_R = np.arange(R)
     srv = served >= 0
-    flat = req_id[srv] * D + served[srv]  # (request, serving DC) pair key
-    bytes_rd = np.bincount(
-        flat, weights=sizes[items_all[srv]], minlength=R * D
-    ).reshape(R, D)
+    if srv.all():
+        # fully-resolved batch (the common case): skip the three boolean-
+        # indexed copies of the flat stream
+        flat = req_id * D + served
+        weights = sz_all
+        n_miss = np.zeros(R, np.int64)
+    else:
+        flat = req_id[srv] * D + served[srv]  # (request, serving DC) pair
+        weights = sz_all[srv]
+        n_miss = np.bincount(req_id[~srv], minlength=R)
+    bytes_rd = np.bincount(flat, weights=weights, minlength=R * D).reshape(R, D)
     served_mask = np.zeros(R * D, dtype=bool)
     served_mask[flat] = True
     served_mask = served_mask.reshape(R, D)
@@ -335,7 +719,6 @@ def route_online_batch(
     straggler = np.where(served_mask, lat_rd, -np.inf).max(axis=1)
     straggler[~served_mask.any(axis=1)] = 0.0
     wan_r = bytes_rd.sum(axis=1) - bytes_rd[ar_R, origin]
-    n_miss = np.bincount(req_id[~srv], minlength=R) if (~srv).any() else np.zeros(R, np.int64)
 
     if obs:
         # serving-path telemetry, batch-granular: one sketch update for the
@@ -344,39 +727,50 @@ def route_online_batch(
         # would blow the 5% overhead budget of BENCH_obs
         # p50/p99 only: every tracked quantile is one more P² sketch fed per
         # batch, and the p90 sketch does not earn its ~20us here
-        reg.histogram(
-            "serving.request_latency_s", quantiles=(0.5, 0.99)
-        ).observe_many(straggler)
+        h = _obs_handles(reg)
+        h.lat.observe_many(straggler)
         wan_total = float(wan_r.sum())
-        reg.counter_keyed("serving.wan_bytes", ()).inc(wan_total)
+        h.wan.inc(wan_total)
         if wan_total > 0.0:
-            onehot = np.zeros((R, D))
-            onehot[ar_R, origin] = 1.0
-            link = bytes_rd.T @ onehot  # [serving DC, origin DC] bytes
+            # [serving DC, origin DC] bytes as one bincount over the R*D
+            # cells — no [R, D] onehot/matmul temporaries on the hot path
+            cell = (np.arange(D) * D)[None, :] + origin[:, None]  # [R, D]
+            link = np.bincount(
+                cell.ravel(), weights=bytes_rd.ravel(), minlength=D * D
+            ).reshape(D, D)
             np.fill_diagonal(link, 0.0)  # local serving is not WAN traffic
-            reg.counter_grid("serving.wan_bytes_link", ("src", "dst")).add(link)
+            h.grid.add(link)
 
-    # per-request materialization: all (r, dc) pairs at once, no np.unique
+    # per-request materialization: all (r, dc) pairs at once, no np.unique;
+    # per_dc_latency dicts build lazily inside RouteResult on first access.
+    # Scalars are pre-extracted to python (tolist) and RouteResult is built
+    # positionally — at batch 1024 this loop is the epilogue's hot half.
     rr, dd = np.nonzero(served_mask)  # row-major: grouped by request
-    pair_lat = lat_rd[rr, dd]
-    pair_bounds = np.concatenate([[0], np.cumsum(np.bincount(rr, minlength=R))])
+    pair_lat = lat_rd[rr, dd].tolist()
+    pair_bounds = np.cumsum(np.bincount(rr, minlength=R)).tolist()
     results: List[RouteResult] = []
-    bounds = np.concatenate([[0], np.cumsum(lens)])
+    append = results.append
+    straggler_l = straggler.tolist()
+    layers_l = layers_used.tolist()
+    n_miss_l = n_miss.tolist()
+    wan_l = wan_r.tolist()
+    bounds_l = bounds.tolist()
+    lo = 0
     for r in range(R):
-        lo, hi = pair_bounds[r], pair_bounds[r + 1]
-        results.append(
+        hi = pair_bounds[r]
+        append(
             RouteResult(
-                served_by=served[bounds[r] : bounds[r + 1]],
-                dcs=dd[lo:hi],
-                latency_s=float(straggler[r]),
-                per_dc_latency=dict(
-                    zip(dd[lo:hi].tolist(), pair_lat[lo:hi].tolist())
-                ),
-                layers_used=int(layers_used[r]),
-                n_missing=int(n_miss[r]),
-                wan_bytes=float(wan_r[r]),
+                served[bounds_l[r] : bounds_l[r + 1]],
+                dd[lo:hi],
+                straggler_l[r],
+                None,
+                layers_l[r],
+                n_miss_l[r],
+                wan_l[r],
+                pair_lat[lo:hi],
             )
         )
+        lo = hi
     return results
 
 

@@ -112,6 +112,10 @@ class GeoGraphStore:
         # both short-circuit to no-ops until telemetry is enabled.
         self.tracer = tracer if tracer is not None else Tracer(clock=time.perf_counter)
         self._registry = registry
+        # wall-clock seconds of the last serve_batch routing pass: the
+        # admission controller's "measured" service model charges this as
+        # router occupancy instead of the linear Eq. 1 occupancy constants
+        self.last_serve_seconds = 0.0
         self.route_index: Optional[RouteIndex] = None
         # content-stable uid per item row: assigned monotonically at birth,
         # row-selected (never renumbered) on compaction.  Placement-journal
@@ -235,6 +239,7 @@ class GeoGraphStore:
         for req, origin in requests:
             items = req.items if isinstance(req, Pattern) else np.asarray(req)
             norm.append((items, int(origin)))
+        t_serve = time.perf_counter()
         with self.tracer.span("store.serve_batch", track="store", size=len(norm)):
             if self.routing_name == "stepwise":
                 # serving.* counters/histograms are emitted batch-granular
@@ -247,6 +252,7 @@ class GeoGraphStore:
                 reg = self._reg()
                 if reg.enabled and results:
                     self._observe_serving(reg, norm, results)
+        self.last_serve_seconds = time.perf_counter() - t_serve
         if observe and norm:
             # heat injection grouped per origin: one observe() per DC touched
             by_origin: Dict[int, List[np.ndarray]] = {}

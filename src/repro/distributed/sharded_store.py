@@ -227,6 +227,12 @@ class ShardedGeoGraphStore:
             self.n_shards, threshold=straggler_threshold
         )
         self.last_shard_seconds: Dict[int, float] = {}
+        # makespan of the last serve_batch (slowest shard's busy seconds):
+        # shards are independent hosts, so this — not the coordinator's wall
+        # time — is what the "measured" admission service model charges.
+        # Owned by the facade (declared pre-_init_done) so it shadows the
+        # inner store's per-sub-batch wall clock.
+        self.last_serve_seconds = 0.0
         if parallel is None:
             parallel = self.n_shards > 1 and (os.cpu_count() or 1) > 1
         self._pool = (
@@ -406,6 +412,7 @@ class ShardedGeoGraphStore:
         for sid in sorted(busy):
             self.straggler.observe(sid, busy[sid])
         self.last_shard_seconds = busy
+        self.last_serve_seconds = max(busy.values(), default=0.0)
         if self.fetch_payload:
             self._fetch_rows(jobs, norm)
         if observe and norm:

@@ -18,9 +18,11 @@ import numpy as np
 
 from . import ref
 from ..obs import get_registry
+from .autotune import get_autotuner
 from .dhd_spmv import dhd_ell_step, dhd_ell_step_batch
 from .embedding_bag import embedding_bag as _embedding_bag_kernel
 from .flash_attention import flash_attention as _flash_attention_kernel
+from .route_expand import route_expand as _route_expand_kernel
 
 __all__ = [
     "attention",
@@ -30,6 +32,9 @@ __all__ = [
     "bag_lookup",
     "edge_cache_stats",
     "on_tpu",
+    "route_expand_batch",
+    "route_expand_candidates",
+    "route_expand_subsets",
 ]
 
 
@@ -397,6 +402,195 @@ def diffuse_batch(
         )
         _obs_dispatch("diffuse_batch", "ref", t0)
     return np.asarray(h)
+
+
+# ------------------------------------------------------ fused route expansion
+_route_expand_ref_jit = jax.jit(ref.route_expand_ref)
+
+
+# precomputed tag keys: the route dispatch sits inside the 5% serving
+# telemetry budget, so it books two plain counters (count + cumulative
+# seconds) instead of the P² histogram _obs_dispatch feeds
+_ROUTE_OBS_KEYS = {
+    path: ((("op", "route_expand"), ("path", path)),)
+    for path in ("kernel", "ref", "subsets")
+}
+
+
+def _route_obs(path: str, t0: Optional[float]) -> None:
+    if t0 is None:
+        return
+    reg = get_registry()
+    # handle pair memoized per registry (dropped with the instruments by
+    # MetricsRegistry.clear()): two dict gets instead of two keyed lookups
+    cache_key = "kernels.route:" + path
+    pair = reg._handle_cache.get(cache_key)
+    if pair is None:
+        (key,) = _ROUTE_OBS_KEYS[path]
+        pair = (
+            reg.counter_keyed("kernels.dispatch", key),
+            reg.counter_keyed("kernels.route_expand_time_s", key),
+        )
+        reg._handle_cache[cache_key] = pair
+    pair[0].inc()
+    pair[1].inc(time.perf_counter() - t0)
+
+
+def route_expand_candidates(
+    backend: Optional[str] = None, n_dcs: Optional[int] = None
+) -> list:
+    """Autotuner candidate configs for ``route_expand`` on ``backend``.
+
+    TPU sweeps the Pallas kernel's request-block shapes against the compiled
+    oracle; CPU pits the jitted oracle against the subset-histogram router
+    (the interpreted kernel exists for validation, not speed).  The subset
+    candidate is offered only when the DC count keeps its ``2**D`` histogram
+    small (``n_dcs`` unknown counts as eligible — dispatch re-checks)."""
+    backend = backend or jax.default_backend()
+    cands = [{"impl": "ref"}]
+    if backend == "tpu":
+        cands += [{"impl": "kernel", "block_r": b} for b in (32, 64, 128, 256)]
+    elif n_dcs is None or n_dcs <= SUBSET_MAX_DCS:
+        cands.append({"impl": "subsets"})
+    return cands
+
+
+def route_expand_batch(
+    bits: np.ndarray,  # [R, K] i32 per-item replica bitmask (bit d = DC d)
+    sizes: np.ndarray,  # [R, K] f32 item bytes (0 where padded)
+    lens: np.ndarray,  # [R] real item count per request
+    origin: np.ndarray,  # [R] origin DC per request
+    comp: np.ndarray,  # [hier + 1, D] layer component ids
+    rtt: np.ndarray,  # [D, D] env RTT matrix
+    ibw: np.ndarray,  # [D, D] elementwise 1 / bandwidth matrix
+    use_kernel: Optional[bool] = None,
+    block_r: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[np.ndarray, ...]:
+    """Fused stepwise layered expansion + Eq. 1 fold for a packed batch.
+
+    Dispatch: an autotuner winner for ``(R, K, D, L)`` (see
+    ``kernels.autotune``) pins impl and block shape; without one, TPU takes
+    the Pallas kernel and CPU the jitted oracle — both produce the oracle's
+    exact greedy picks (``ref.route_expand_ref``).  Returns numpy
+    ``(served, bytes_rd, layers_used, miss_after, straggler_s, wan_bytes)``.
+    """
+    R, K = bits.shape
+    L = comp.shape[0] - 1
+    D = comp.shape[1]
+    t0 = _obs_t0()
+    if use_kernel is None or block_r is None:
+        cfg = get_autotuner().lookup("route_expand", (R, K, D, L)) or {}
+        if use_kernel is None:
+            impl = cfg.get("impl", "kernel" if on_tpu() else "ref")
+            use_kernel = impl == "kernel"
+        if block_r is None:
+            block_r = int(cfg.get("block_r", 128))
+    if interpret is None:
+        interpret = not on_tpu()
+    args = (
+        jnp.asarray(bits, jnp.int32),
+        jnp.asarray(sizes, jnp.float32),
+        jnp.asarray(lens, jnp.int32),
+        jnp.asarray(origin, jnp.int32),
+        jnp.asarray(comp, jnp.int32),
+        jnp.asarray(rtt, jnp.float32),
+        jnp.asarray(ibw, jnp.float32),
+    )
+    if use_kernel:
+        out = _route_expand_kernel(
+            *args, block_r=int(block_r), interpret=interpret
+        )
+        out = tuple(np.asarray(o) for o in out)
+        _route_obs("kernel", t0)
+    else:
+        out = _route_expand_ref_jit(*args)
+        out = tuple(np.asarray(o) for o in out)
+        _route_obs("ref", t0)
+    return out
+
+
+# subset-histogram router: with D data centers an item's routing behaviour is
+# fully determined by its replica bitmask, so a batch collapses to at most
+# 2**D distinct item classes per request.  Histogramming the flat item stream
+# over (request, bitmask) turns every greedy pass into [R, 2**D]-sized work —
+# independent of the item count — which on CPU beats both the jitted oracle
+# and the (interpreted) kernel by a wide margin for small D.
+SUBSET_MAX_DCS = 8
+
+_SUBSET_HAS_CACHE: dict = {}
+
+
+def _subset_has(n_dc: int) -> Tuple[np.ndarray, np.ndarray]:
+    hit = _SUBSET_HAS_CACHE.get(n_dc)
+    if hit is None:
+        s = np.arange(1 << n_dc, dtype=np.int64)
+        has = ((s[:, None] >> np.arange(n_dc)) & 1).astype(bool)  # [S, D]
+        hit = (has, has.astype(np.float64))
+        _SUBSET_HAS_CACHE.clear()
+        _SUBSET_HAS_CACHE[n_dc] = hit
+    return hit
+
+
+def route_expand_subsets(
+    bits_flat: np.ndarray,  # [K] i32/i64 per-item replica bitmask, flat stream
+    req_id: np.ndarray,  # [K] request id per flat item (sorted by request)
+    n_requests: int,
+    origin: np.ndarray,  # [R] origin DC per request
+    comp: np.ndarray,  # [hier + 1, D] layer component ids
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stepwise layered expansion over per-request replica-subset histograms.
+
+    Runs the exact greedy of ``route_online`` (same coverage counts — an
+    item contributes to a DC's coverage iff its bitmask holds that DC's bit —
+    same lowest-DC-id argmax tie-break, same layer escalation) but on
+    ``[R, 2**D]`` subset counts, then scatters each subset's serving DC back
+    to its items with one gather.  Returns
+    ``(served [K] i64, layers_used [R] i64, miss_after [R, hier + 1] i64)``;
+    the byte/latency fold is left to the caller's exact host epilogue.
+    """
+    t0 = _obs_t0()
+    R = int(n_requests)
+    L = comp.shape[0] - 1
+    D = comp.shape[1]
+    S = 1 << D
+    has, has_f = _subset_has(D)
+    # [R, S] item count per (request, replica subset); exact as f64 (< 2^53)
+    cnt = np.bincount(
+        req_id * S + bits_flat.astype(np.int64), minlength=R * S
+    ).reshape(R, S).astype(np.float64)
+    origin_in = has[:, origin].T  # [R, S] subset holds the origin's bit
+    serve = np.where(origin_in, origin[:, None], -1)  # [R, S] per-subset DC
+    missing = ~origin_in
+    miss_cnt = (cnt * missing).sum(axis=1)
+    miss_after = np.zeros((R, L + 1), dtype=np.int64)
+    miss_after[:, 0] = miss_cnt
+    ar_R = np.arange(R)
+    layers_used = np.zeros(R, dtype=np.int64)
+    for layer in range(1, L + 1):
+        if not miss_cnt.any():
+            break  # untouched miss_after columns stay 0 == fully resolved
+        cl = comp[layer]
+        allowed = cl[origin][:, None] == cl[None, :]  # [R, D]
+        allowed[ar_R, origin] = False
+        layers_used = np.where(
+            (miss_cnt > 0) & allowed.any(axis=1), layer, layers_used
+        )
+        while True:
+            cover = (cnt * missing) @ has_f  # [R, D] exact integer counts
+            cover[~allowed] = 0.0
+            best = cover.argmax(axis=1)  # first max == lowest DC id
+            progressed = cover[ar_R, best] > 0
+            if not progressed.any():
+                break
+            hit = missing & has[:, best].T & progressed[:, None]
+            serve = np.where(hit, best[:, None], serve)
+            missing &= ~hit
+            miss_cnt = (cnt * missing).sum(axis=1)
+        miss_after[:, layer] = miss_cnt
+    served = serve[req_id, bits_flat]
+    _route_obs("subsets", t0)
+    return served, layers_used, miss_after
 
 
 def bag_lookup(

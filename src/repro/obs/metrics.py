@@ -146,7 +146,10 @@ class P2Quantile:
         # carries over, so later batches absorb it; the height estimate
         # oscillates inside the tie neighbourhood, which is the correct
         # quantile there anyway.
-        for _ in range(min(m, self.SETTLE_PASSES)):
+        # pass budget scales with the batch so pooled (buffered) batches get
+        # proportionally more settle opportunities — a flat cap starves the
+        # markers when thousands of values arrive in one flush
+        for _ in range(min(m, self.SETTLE_PASSES + m // 256)):
             moved = self._nudge(1)
             moved |= self._nudge(2)
             moved |= self._nudge(3)
@@ -251,9 +254,19 @@ class Gauge:
 class Histogram:
     """Streaming histogram: count/sum/min/max plus P² quantile sketches."""
 
-    __slots__ = ("name", "tags", "quantiles", "count", "sum", "min", "max", "_sketches")
+    __slots__ = (
+        "name", "tags", "quantiles", "count", "sum", "min", "max",
+        "_sketches", "_buf", "_buf_n",
+    )
 
     DEFAULT_QUANTILES = (0.5, 0.9, 0.99)
+
+    # batches accumulate here before the P² sketches see them: marker math
+    # costs ~50-100us of cold-cache Python per batch, which the 5% serving
+    # telemetry budget cannot pay at every serve_batch.  count/sum/min/max
+    # stay exact per batch; sketches are fed the pooled sorted buffer once
+    # it crosses this many values (or on any quantile read)
+    FLUSH_AT = 8192
 
     def __init__(
         self,
@@ -269,8 +282,12 @@ class Histogram:
         self.min = math.inf
         self.max = -math.inf
         self._sketches = [P2Quantile(q) for q in self.quantiles]
+        self._buf: list = []
+        self._buf_n = 0
 
     def observe(self, value: float) -> None:
+        if self._buf_n:
+            self._flush()
         value = float(value)
         self.count += 1
         self.sum += value
@@ -282,9 +299,12 @@ class Histogram:
             s.add(value)
 
     def observe_many(self, values) -> None:
-        """Vectorized :meth:`observe` for a whole batch: one shared sort
-        feeds every sketch's batch-P² update, so serving paths can record
-        hundreds of latencies per call without per-value Python work."""
+        """Vectorized :meth:`observe` for a whole batch.
+
+        count/sum/min/max update immediately (exact at every read); the
+        values are buffered and fed to the P² sketches — one shared sort,
+        batch-P² per sketch — only when :attr:`FLUSH_AT` values have pooled
+        or a quantile is read, amortizing the marker math across batches."""
         vals = np.asarray(values, dtype=float)
         m = int(vals.size)
         if m == 0:
@@ -292,17 +312,33 @@ class Histogram:
         if m == 1:
             self.observe(float(vals[0]))
             return
-        vals = np.sort(vals, axis=None)
         self.count += m
         self.sum += float(vals.sum())
-        if vals[0] < self.min:
-            self.min = float(vals[0])
-        if vals[-1] > self.max:
-            self.max = float(vals[-1])
+        lo = float(vals.min())
+        hi = float(vals.max())
+        if lo < self.min:
+            self.min = lo
+        if hi > self.max:
+            self.max = hi
+        self._buf.append(vals)
+        self._buf_n += m
+        if self._buf_n >= self.FLUSH_AT:
+            self._flush()
+
+    def _flush(self) -> None:
+        buf = self._buf
+        if not buf:
+            return
+        vals = buf[0] if len(buf) == 1 else np.concatenate(buf)
+        vals = np.sort(vals, axis=None)
+        self._buf = []
+        self._buf_n = 0
         for s in self._sketches:
             s.add_many(vals)
 
     def quantile(self, q: float) -> float:
+        if self._buf_n:
+            self._flush()
         for s in self._sketches:
             if s.q == q:
                 return s.value()
@@ -313,6 +349,8 @@ class Histogram:
         return self.sum / self.count if self.count else math.nan
 
     def snapshot(self) -> dict:
+        if self._buf_n:
+            self._flush()
         return {
             "type": "histogram",
             "count": self.count,
@@ -329,6 +367,8 @@ class Histogram:
         self.min = math.inf
         self.max = -math.inf
         self._sketches = [P2Quantile(q) for q in self.quantiles]
+        self._buf = []
+        self._buf_n = 0
 
 
 class MatrixCounter:
@@ -421,6 +461,11 @@ class MetricsRegistry:
         self.enabled = enabled
         self._lock = threading.Lock()
         self._instruments: Dict[Tuple[str, TagKey], object] = {}
+        # hot callers park pre-resolved instrument handles here (keyed by
+        # caller-chosen name) so a serve-path batch pays one dict get
+        # instead of one keyed lookup per instrument; cleared with the
+        # instruments so handles can never outlive them
+        self._handle_cache: Dict[str, object] = {}
 
     # -- lifecycle ---------------------------------------------------------
     def enable(self) -> "MetricsRegistry":
@@ -439,6 +484,7 @@ class MetricsRegistry:
     def clear(self) -> None:
         with self._lock:
             self._instruments.clear()
+            self._handle_cache.clear()
 
     # -- instrument accessors ---------------------------------------------
     def _get_keyed(self, cls, name: str, key: TagKey, **kw):

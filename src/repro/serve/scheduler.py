@@ -41,6 +41,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
+import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
@@ -94,7 +95,16 @@ class AdmissionConfig:
     max_batch: int = 256
     initial_batch: int = 8
     quantum: int = 8  # per-origin requests taken per round-robin pass
-    # simulated router occupancy per drain
+    # router occupancy charged per drain.  "occupancy" (default) keeps the
+    # deterministic linear model below; "measured" charges the store's
+    # actual serving time instead — ``store.last_serve_seconds`` (the
+    # sharded store reports its slowest shard's busy seconds) with the
+    # drain's own wall clock as fallback — so the AIMD loop reacts to the
+    # real router (e.g. the kernels fast path making big batches cheap).
+    # Measured mode injects wall time into the simulated clock: runs are
+    # no longer replay-deterministic, which is the point.
+    service_model: str = "occupancy"
+    # simulated router occupancy per drain ("occupancy" model constants)
     dispatch_overhead_s: float = 2e-3
     per_request_s: float = 2e-5
     # AIMD loop
@@ -115,6 +125,8 @@ class AdmissionConfig:
             raise ValueError(f"unknown policy {self.policy!r}")
         if self.fairness not in ("round_robin", "fifo"):
             raise ValueError(f"unknown fairness {self.fairness!r}")
+        if self.service_model not in ("occupancy", "measured"):
+            raise ValueError(f"unknown service_model {self.service_model!r}")
         if self.per_shard_aimd and (
             self.policy != "adaptive" or self.fairness != "round_robin"
         ):
@@ -407,6 +419,7 @@ class AdmissionController:
                 return []
         batch = self._form_batch(target, shard_key=shard_key)
         t0 = self.clock.now()
+        t_wall = time.perf_counter()
         try:
             results = self.store.serve_batch([(h.items, h.origin) for h in batch])
         except BaseException:
@@ -414,9 +427,18 @@ class AdmissionController:
             # queue fronts and the next step retries it
             self._requeue(batch)
             raise
-        compute_s = (
-            self.cfg.dispatch_overhead_s + len(batch) * self.cfg.per_request_s
-        )
+        if self.cfg.service_model == "measured":
+            measured = getattr(self.store, "last_serve_seconds", None)
+            compute_s = (
+                float(measured)
+                if measured is not None
+                else time.perf_counter() - t_wall
+            )
+        else:
+            compute_s = (
+                self.cfg.dispatch_overhead_s
+                + len(batch) * self.cfg.per_request_s
+            )
         straggler = max((r.latency_s for r in results), default=0.0)
         t_done = t0 + compute_s + straggler
         bid = self._n_batches

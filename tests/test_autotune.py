@@ -1,0 +1,145 @@
+"""Kernel autotuner: winner caching, deterministic serialization, fallbacks."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.autotune import (
+    TABLE_VERSION,
+    Autotuner,
+    shape_bucket,
+    signature_key,
+)
+from repro.obs import MetricsRegistry
+
+
+def test_shape_bucket_pow2():
+    assert shape_bucket(1) == 8  # floor
+    assert shape_bucket(8) == 8
+    assert shape_bucket(9) == 16
+    assert shape_bucket(1000) == 1024
+    assert shape_bucket(5, floor=2) == 8  # still pow2 above n
+
+
+def test_signature_key_stable():
+    assert signature_key((128, 1024, 5, 3)) == "128x1024x5x3"
+
+
+def _tuner():
+    return Autotuner(registry=MetricsRegistry(enabled=True))
+
+
+def test_sweep_caches_winner_and_lookup_hits():
+    tuner = _tuner()
+    calls = []
+
+    def runner(cfg):
+        calls.append(cfg["impl"])
+
+    win = tuner.sweep(
+        "route_expand", (8, 64, 5, 3),
+        [{"impl": "ref"}, {"impl": "subsets"}],
+        runner, repeats=2, device="cpu:test",
+    )
+    assert win["impl"] in ("ref", "subsets")
+    # warm-up + repeats per candidate
+    assert len(calls) == 2 * 3
+    got = tuner.lookup("route_expand", (8, 64, 5, 3), device="cpu:test")
+    assert got == win
+    reg = tuner._reg()
+    assert reg.counter("kernels.autotune_hit", op="route_expand").value == 1
+
+
+def test_unknown_device_lookup_misses_with_counter():
+    tuner = _tuner()
+    assert tuner.lookup("route_expand", (8, 64, 5, 3), device="tpu:v99") is None
+    reg = tuner._reg()
+    assert reg.counter("kernels.autotune_miss", op="route_expand").value == 1
+
+
+def test_dumps_sorted_key_deterministic():
+    """Two tables built with insertions in different orders serialize to
+    byte-identical JSON (sorted keys + version stamp)."""
+    def fill(order):
+        t = _tuner()
+        for sig in order:
+            t._table.setdefault("cpu:x", {}).setdefault("op", {})[
+                signature_key(sig)
+            ] = {"config": {"impl": "ref"}, "best_s": 0.5, "timings": []}
+        return t.dumps()
+
+    a = fill([(8, 64), (16, 128), (8, 256)])
+    b = fill([(8, 256), (8, 64), (16, 128)])
+    assert a == b
+    assert json.loads(a)["version"] == TABLE_VERSION
+
+
+def test_save_load_round_trip(tmp_path):
+    tuner = _tuner()
+    tuner.sweep(
+        "route_expand", (8, 64, 5, 3), [{"impl": "ref"}],
+        lambda cfg: None, device="cpu:test",
+    )
+    path = tmp_path / "autotune.json"
+    tuner.save(str(path))
+    fresh = _tuner()
+    assert fresh.load(str(path)) is True
+    assert fresh.lookup("route_expand", (8, 64, 5, 3), device="cpu:test") == {
+        "impl": "ref"
+    }
+    # round trip is byte-stable
+    fresh.save(str(tmp_path / "again.json"))
+    assert path.read_text() == (tmp_path / "again.json").read_text()
+
+
+def test_load_rejects_stale_version():
+    tuner = _tuner()
+    ok = tuner.load({"version": TABLE_VERSION + 1, "tables": {"cpu:x": {}}})
+    assert ok is False
+    reg = tuner._reg()
+    assert reg.counter("kernels.autotune_stale_table").value == 1
+    assert tuner.snapshot()["tables"] == {}
+
+
+def test_reset_drops_winners():
+    tuner = _tuner()
+    tuner.sweep(
+        "route_expand", (8, 64, 5, 3), [{"impl": "ref"}],
+        lambda cfg: None, device="cpu:test",
+    )
+    tuner.reset()
+    assert tuner.lookup("route_expand", (8, 64, 5, 3), device="cpu:test") is None
+
+
+def test_tie_break_on_config_json():
+    """Under equal timings the winner is the lexicographically smallest
+    sorted-key config JSON — deterministic across runs."""
+    tuner = _tuner()
+    fake = iter([0.5] * 100)
+
+    import repro.kernels.autotune as at
+
+    real = at.time.perf_counter
+    at.time.perf_counter = lambda: next(fake, 50.0)
+    try:
+        win = tuner.sweep(
+            "op", (8,),
+            [{"impl": "zeta"}, {"impl": "alpha"}],
+            lambda cfg: None, repeats=1, device="cpu:test",
+        )
+    finally:
+        at.time.perf_counter = real
+    assert win == {"impl": "alpha"}
+
+
+def test_route_expand_candidates_by_backend():
+    cpu = ops.route_expand_candidates("cpu", n_dcs=5)
+    assert {"impl": "ref"} in cpu
+    assert {"impl": "subsets"} in cpu
+    # too many DCs for the 2**D histogram: subsets is withdrawn
+    wide = ops.route_expand_candidates("cpu", n_dcs=16)
+    assert all(c["impl"] != "subsets" for c in wide)
+    tpu = ops.route_expand_candidates("tpu", n_dcs=5)
+    assert any(c["impl"] == "kernel" for c in tpu)
+    assert all(c["impl"] != "subsets" for c in tpu)

@@ -498,3 +498,70 @@ def test_shim_preserves_queue_across_exception():
     assert [h.rid for h in fe.queue] == rids  # FIFO order intact
     out = fe.flush()
     assert sorted(out.keys()) == rids and fe.pending == 0
+
+
+# ---------------------------------------------------- measured service model
+class _TimedStore:
+    """Store stub reporting a fixed measured serving time per drain."""
+
+    def __init__(self, store, seconds):
+        self.store = store
+        self.seconds = seconds
+
+    def serve_batch(self, reqs):
+        out = self.store.serve_batch(reqs)
+        self.last_serve_seconds = self.seconds
+        return out
+
+
+def test_measured_service_model_charges_store_time():
+    store = _store(13)
+    timed = _TimedStore(store, 0.125)
+    ctl = AdmissionController(
+        timed, AdmissionConfig(service_model="measured")
+    )
+    client = StoreClient(ctl)
+    pats = [p for p in store.workload.patterns if len(p.items)]
+    for i in range(8):
+        client.submit(pats[i % len(pats)].items, 0, at=0.0)
+    ctl.run_until_idle()
+    assert ctl.history
+    # every drain charged exactly the store's measured seconds, not the
+    # linear occupancy model
+    assert all(b.compute_s == 0.125 for b in ctl.history)
+
+
+def test_measured_service_model_wall_clock_fallback():
+    """A store without ``last_serve_seconds`` falls back to the drain's own
+    wall clock — still positive, never the occupancy constants."""
+
+    class _Bare:
+        def __init__(self, store):
+            self._s = store
+
+        def serve_batch(self, reqs):
+            return self._s.serve_batch(reqs)
+
+    store = _store(14)
+    ctl = AdmissionController(
+        _Bare(store), AdmissionConfig(service_model="measured")
+    )
+    client = StoreClient(ctl)
+    pats = [p for p in store.workload.patterns if len(p.items)]
+    for i in range(4):
+        client.submit(pats[i % len(pats)].items, 0, at=0.0)
+    ctl.run_until_idle()
+    assert all(b.compute_s > 0.0 for b in ctl.history)
+
+
+def test_real_store_reports_last_serve_seconds():
+    store = _store(15)
+    pats = [p for p in store.workload.patterns if len(p.items)]
+    assert store.last_serve_seconds == 0.0
+    store.serve_batch([(pats[0].items, 0), (pats[1].items, 1)])
+    assert store.last_serve_seconds > 0.0
+
+
+def test_service_model_validated():
+    with pytest.raises(ValueError, match="service_model"):
+        AdmissionConfig(service_model="psychic")

@@ -134,3 +134,34 @@ def test_graph_frontend_fifo_drain(small_setup, small_store):
     for p, rid in zip(pats[:30], rids):
         ref = store.serve_online(p, int(np.argmax(p.r_py)))
         assert np.array_equal(out[rid].served_by, ref.served_by)
+
+
+def test_batch_of_one_books_batch_path_telemetry(small_setup, small_store):
+    """The size-1 scalar fast path must account exactly like the batch path:
+    same counters, same values — duplicating the request into a size-2 batch
+    books exactly double (PR 8's batch-1 parity fix)."""
+    from repro.obs import MetricsRegistry
+
+    g, env, csr, wl, pats = small_setup
+    store = small_store
+    req = (pats[0].items, (int(np.argmax(pats[0].r_py)) + 1) % env.n_dcs)
+
+    reg1 = MetricsRegistry(enabled=True)
+    route_online_batch(store.lg, store.state, [req], registry=reg1)
+    reg2 = MetricsRegistry(enabled=True)
+    route_online_batch(store.lg, store.state, [req, req], registry=reg2)
+
+    s1, s2 = reg1.snapshot(), reg2.snapshot()
+    assert s1["serving.requests"]["-"]["value"] == 1.0
+    assert s2["serving.requests"]["-"]["value"] == 2.0
+    for tag, rec in s2.get("routing.layer_hits", {}).items():
+        assert s1["routing.layer_hits"][tag]["value"] == rec["value"] / 2.0
+    assert set(s1.get("routing.layer_hits", {})) == set(
+        s2.get("routing.layer_hits", {})
+    )
+    w1 = s1["serving.wan_bytes"]["-"]["value"]
+    w2 = s2["serving.wan_bytes"]["-"]["value"]
+    # scalar path sums f32 sizes, batch path folds f64: approx only
+    assert w1 == pytest.approx(w2 / 2.0, rel=1e-6)
+    if "serving.wan_bytes_link" in s2:
+        assert "serving.wan_bytes_link" in s1

@@ -392,3 +392,30 @@ def test_controller_drives_sharded_store_end_to_end():
     assert (sh.straggler.lat > 0).sum() == len(m["batch_target_by_shard"])
     merged = sh.merged_metrics()
     assert merged["serving.requests"]["-"]["value"] == 120.0
+
+
+# ------------------------------------------------- kernels fast-path parity
+@pytest.mark.parametrize("n_shards", [2, 4, 8])
+def test_fast_path_identity_across_shard_counts(n_shards):
+    """The kernels fast path forced through the sharded per-shard dispatch
+    must stay float-identical to the numpy single-process store: the shared
+    f64 epilogue makes impl choice invisible in results."""
+    from repro.core.routing import (
+        RouteFastConfig,
+        get_route_fast_config,
+        set_route_fast_config,
+    )
+
+    env = mesh_env(8, shards_per_pod=4)
+    ref, sh, pats = _pair(60, env, n_shards)
+    reqs = _requests(pats, env, 96, seed=61)
+    want = ref.serve_batch(reqs)
+    old = get_route_fast_config()
+    set_route_fast_config(RouteFastConfig(min_requests=2))
+    try:
+        got = sh.serve_batch(reqs)
+    finally:
+        set_route_fast_config(old)
+    _assert_results_equal(want, got)
+    # the measured-service hook reports the slowest shard's busy seconds
+    assert sh.last_serve_seconds == max(sh.last_shard_seconds.values())
