@@ -6,8 +6,8 @@ the :class:`~repro.serve.AdmissionController` —
 
   * ``fixed``    — the fixed-batch FIFO frontend: global FIFO order, a drain
     dispatches only once ``max_batch`` requests are pending (trailing
-    partial drain when arrivals end).  This is the deprecated
-    ``GraphFrontend`` usage pattern (buffer, then flush full chunks).
+    partial drain when arrivals end).  This is the retired FIFO-frontend
+    usage pattern (buffer, then flush full chunks).
   * ``greedy``   — work-conserving fixed cap (dispatch whenever free).
   * ``adaptive`` — the AIMD loop: batch target grows while measured latency
     keeps deadline slack, shrinks on violation; round-robin origin fairness.

@@ -21,6 +21,7 @@ def main() -> None:
         bench_ablation,
         bench_cost,
         bench_exec_time,
+        bench_forecast,
         bench_heterogeneity,
         bench_kernels,
         bench_migration,
@@ -52,6 +53,7 @@ def main() -> None:
         "placement": bench_placement.run,
         "migration": bench_migration.run,
         "scheduler": bench_scheduler.run,
+        "forecast": bench_forecast.run,
         "obs": bench_obs_overhead.run,
     }
     only = set(args.only.split(",")) if args.only else None

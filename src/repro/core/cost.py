@@ -223,7 +223,16 @@ def check_constraints(
     env: GeoEnvironment,
     gamma_max_s: float,
 ) -> Dict[str, bool]:
-    """Constraints (a)-(e) of Eq. (6).  Returns per-constraint pass flags."""
+    """Constraints (a)-(e) of Eq. (6).  Returns per-constraint pass flags.
+
+    ``r_xy`` is the demand table the placement is accountable to.  The
+    pattern constraints (b) and (d) bind only at origins whose reads of the
+    pattern exist in that table: with the offline workload's ``r_xy`` (built
+    as the per-item sum of every pattern's ``r_py``) this is exactly the
+    ``r_py > 0`` origin set, while an injected measured/forecast demand
+    table frees origins with zero live traffic from the SLO — a replica
+    nobody reads from must be droppable (Alg. 3), which a constraint pinned
+    to retired synthetic reads would forbid forever."""
     I, D = r_xy.shape
     ok: Dict[str, bool] = {}
     routed = state.route >= 0
@@ -239,6 +248,8 @@ def check_constraints(
     ok_b = True
     for p in patterns:
         for y in np.where(p.r_py > 0)[0]:
+            if not requested[p.items, y].any():
+                continue  # no live demand for this pattern at y
             d = state.route[p.items, y]
             if (d < 0).any():
                 ok_b = False
@@ -266,6 +277,8 @@ def check_constraints(
     ok_d = True
     for p in patterns:
         for y in np.where(p.r_py > 0)[0]:
+            if not requested[p.items, y].any():
+                continue  # no live demand for this pattern at y
             _, lat = pattern_latencies(p.items, int(y), state, sizes, env)
             if len(lat) and lat.max() > p.eta * gamma_max_s + 1e-12:
                 ok_d = False

@@ -668,20 +668,32 @@ def precache_hot_regions(
     params: dhd.DHDParams = dhd.DHDParams(),
     n_steps: int = 48,
     max_per_dc: int = 4096,
+    read_intensity: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """Steady-state DHD over the whole graph; cache vertices whose equilibrium
     heat is >= the ``theta_quantile`` of the heat distribution at every DC
     that does not own them (bounded by ``max_per_dc``).  Returns hot-vertex ids.
+
+    ``read_intensity`` injects the ``[n_items]`` per-item demand the DHD
+    seeds/edge weights derive from — a measured or *forecast* view from the
+    demand plane (``ODDemandLayer.measured()/forecast().item_heat``).  The
+    default reads the static workload tables, which is bit-identical to the
+    pre-demand-plane behavior.
     """
-    r_v = workload.r_xy[: g.n_nodes].sum(axis=1).astype(np.float32)
+    if read_intensity is None:
+        r_v = workload.r_xy[: g.n_nodes].sum(axis=1).astype(np.float32)
+        w_raw = workload.r_xy[g.n_nodes :].sum(axis=1).astype(np.float32)
+    else:
+        ri = np.asarray(read_intensity, dtype=np.float32)
+        r_v = ri[: g.n_nodes]
+        w_raw = ri[g.n_nodes :]
     if r_v.max() <= 0:
         return np.zeros(0, dtype=np.int64)
     heat0 = r_v / r_v.max()
     theta = float(np.quantile(heat0[heat0 > 0], theta_quantile)) if (heat0 > 0).any() else 0.0
     sources = heat0 >= theta
     q0 = np.where(sources, 1.0 / max(sources.sum(), 1), 0.0).astype(np.float32)
-    w_e = workload.r_xy[g.n_nodes :].sum(axis=1).astype(np.float32)
-    w_e = w_e / max(w_e.max(), 1.0) + 1e-3
+    w_e = w_raw / max(w_raw.max(), 1.0) + 1e-3
     heat = dhd.diffuse_affinity_batch(
         g.n_nodes, g.src, g.dst, w_e, q0[None, :], base_heat=heat0,
         params=params, n_steps=n_steps,
@@ -698,7 +710,14 @@ def precache_hot_regions(
 
 # ------------------------------------------------------------------ eviction
 class HeatCache:
-    """Online replica eviction (Alg. 3): heat-tracked cache per DC."""
+    """Online replica eviction (Alg. 3): heat-tracked cache per DC.
+
+    The cache does not own its heat array: ``heat`` is a shared-storage row
+    view into the store's :class:`~repro.demand.ODDemandLayer` (the single
+    owner of online request heat).  Standalone construction (tests, ad-hoc
+    use) gets a private single-row demand layer, so the Alg. 3 semantics are
+    identical either way — accumulate via ``observe``, diffuse via ``step``,
+    evict below ``theta_c``."""
 
     def __init__(
         self,
@@ -707,16 +726,32 @@ class HeatCache:
         state: PlacementState,
         params: dhd.DHDParams = dhd.DHDParams(),
         theta_c: float = 0.05,
+        demand=None,
     ) -> None:
         self.g = g
         self.dc = dc
         self.state = state
         self.params = params
         self.theta_c = theta_c
-        self.heat = np.zeros(g.n_items, dtype=np.float32)
+        if demand is None:
+            # standalone cache: private single-row demand layer (row 0)
+            from ..demand import ODDemandLayer
+
+            demand = ODDemandLayer(g.n_items, 1)
+            self._row = 0
+        else:
+            self._row = dc
+        self.demand = demand
         # streaming stores set this to the alive mask so diffusion never
         # crosses tombstoned edges; None = static graph, all edges live
         self.edge_mask: Optional[np.ndarray] = None
+
+    @property
+    def heat(self) -> np.ndarray:
+        """This DC's row of the demand plane's ``[D, n_items]`` heat table —
+        a view, not a copy: in-place mutation (diffusion, decay) writes
+        through, and there is no second array to fall out of sync."""
+        return self.demand.heat[self._row]
 
     def cached_mask(self) -> np.ndarray:
         """Replicas held at this DC beyond the primary partition copy."""
@@ -728,9 +763,11 @@ class HeatCache:
     def observe(self, item_ids: np.ndarray, freq: float = 1.0) -> None:
         """External heat injection: one access event batch (Alg. 3 lines 3-5).
 
-        Duplicate ids accumulate (``serve_batch`` concatenates per-origin
-        request items), which fancy-index ``+=`` would silently collapse."""
-        np.add.at(self.heat, np.asarray(item_ids), freq)
+        Delegates to the demand plane — the one place accumulation happens —
+        where duplicate ids accumulate (``serve_batch`` concatenates
+        per-origin request items), which fancy-index ``+=`` would silently
+        collapse."""
+        self.demand.observe(item_ids, origin=self._row, freq=freq)
 
     def step(self, n_steps: int = 4) -> None:
         """Diffuse heat over the cache topology (vertex items only)."""

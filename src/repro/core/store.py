@@ -14,6 +14,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import baselines
+from ..demand import ODDemandLayer
 from ..obs import Tracer, get_registry
 from .cost import CostBreakdown, PlacementState, check_constraints, total_cost
 from .graph import Graph, build_csr, grow_item_rows
@@ -98,6 +99,7 @@ class GeoGraphStore:
         compact_ratio: float = 0.30,
         tracer: Optional[Tracer] = None,
         registry=None,
+        demand_window_s: float = 60.0,
     ) -> None:
         self.g = g
         self.env = env
@@ -143,8 +145,16 @@ class GeoGraphStore:
             self.state, pstats = self._place(placement, seed)
         with self.tracer.span("store.route", track="store", strategy=routing):
             self._apply_routing(routing, seed)
+        # demand plane: single owner of online request heat.  Every per-DC
+        # HeatCache reads its row of the [D, I] table as a view — the serving
+        # path deposits heat exactly once, there is no per-cache copy to
+        # double-book (ISSUE 9 single-ownership invariant).
+        self.demand = ODDemandLayer(
+            g.n_items, env.n_dcs, window_s=demand_window_s, registry=registry
+        )
         self.caches = {
-            d: HeatCache(g, d, self.state, self.config.dhd) for d in range(env.n_dcs)
+            d: HeatCache(g, d, self.state, self.config.dhd, demand=self.demand)
+            for d in range(env.n_dcs)
         }
         self.stats = StoreStats(
             placement_stats=pstats,
@@ -218,8 +228,9 @@ class GeoGraphStore:
             res = route_online(self.lg, self.state, pattern.items, origin)
         else:
             res = self._route_by_table(pattern.items, origin)
-        # record accesses into the origin's heat cache (Alg. 3 injection)
-        self.caches[origin].observe(pattern.items, freq=1.0)
+        # record the access into the demand plane (Alg. 3 injection: the
+        # origin's heat-cache row is a view of the same table)
+        self.demand.observe(pattern.items, origin=origin, freq=1.0)
         return res
 
     def serve_batch(
@@ -254,12 +265,9 @@ class GeoGraphStore:
                     self._observe_serving(reg, norm, results)
         self.last_serve_seconds = time.perf_counter() - t_serve
         if observe and norm:
-            # heat injection grouped per origin: one observe() per DC touched
-            by_origin: Dict[int, List[np.ndarray]] = {}
-            for items, o in norm:
-                by_origin.setdefault(o, []).append(items)
-            for o, groups in by_origin.items():
-                self.caches[o].observe(np.concatenate(groups))
+            # heat injection grouped per origin inside the demand plane: one
+            # scatter per DC touched, accumulated exactly once
+            self.demand.observe_requests(norm)
         return results
 
     def _observe_serving(self, reg, norm, results: List[RouteResult]) -> None:
@@ -356,6 +364,54 @@ class GeoGraphStore:
                 self._heat.solve()
                 residual = self._heat.residual
             return {"evicted": evicted, "heat_residual": residual}
+
+    def demand_view(self):
+        """Measured demand-plane view (:class:`~repro.demand.DemandView`) —
+        the same planner coordinates ``ODDemandLayer.forecast()`` produces,
+        so measured and predicted demand flow through one code path."""
+        return self.demand.measured()
+
+    def precache(
+        self,
+        item_heat: Optional[np.ndarray] = None,
+        theta_quantile: Optional[float] = None,
+        max_per_dc: Optional[int] = None,
+    ) -> np.ndarray:
+        """Demand-driven DHD pre-caching (§V), online flavor.
+
+        Seeds :func:`~repro.core.placement.precache_hot_regions` from the
+        demand plane: an injected ``item_heat`` (e.g. a forecast view's) if
+        given, else the measured demand view, else — before any traffic —
+        the static workload tables (the placement-time default).  Newly
+        added replicas are patched into the route index; returns the item
+        rows whose replica sets changed."""
+        from .placement import precache_hot_regions
+
+        self._resync_route_index()
+        intensity = item_heat
+        if intensity is None:
+            measured = self.demand.measured().item_heat
+            if float(measured.max(initial=0.0)) > 0.0:
+                intensity = measured
+        before = self.state.delta.copy()
+        precache_hot_regions(
+            self.g, self.workload, self.state,
+            self.config.theta_quantile if theta_quantile is None else theta_quantile,
+            self.config.dhd,
+            max_per_dc=(
+                self.config.precache_max_per_dc if max_per_dc is None else max_per_dc
+            ),
+            read_intensity=intensity,
+        )
+        changed = np.where((self.state.delta != before).any(axis=1))[0]
+        if len(changed):
+            if self.route_index is not None:
+                self.route_index.patch_rows(self.state.delta, changed)
+            else:
+                from ..streaming.migration import _reroute_items
+
+                _reroute_items(self.state, self.env, changed)
+        return changed
 
     def delete_items(self, item_ids: np.ndarray) -> None:
         """Bottom-up delete cleanup: drop all replicas everywhere (§V)."""
@@ -541,10 +597,12 @@ class GeoGraphStore:
         self.workload = Workload(
             patterns=pats, n_items=g2.n_items, n_dcs=wl.n_dcs, r_xy=r2, w_xy=w2
         )
+        # the demand plane grows all its item-indexed tables once; the
+        # caches' heat rows are views and follow automatically
+        self.demand.grow_items(old_n, nv, ne)
         for cache in self.caches.values():
             cache.g = g2
             cache.edge_mask = dg.edge_alive
-            cache.heat = grow_item_rows(cache.heat, old_n, nv, ne, 0.0)
         self.g = g2
 
         # --- incremental layered-graph repair ----------------------------
@@ -732,11 +790,12 @@ class GeoGraphStore:
             w_xy=self.workload.w_xy[keep],
         )
 
-        # heat caches: row-select, drop the (now all-True) edge mask
+        # demand plane: row-select every item-indexed table; the caches'
+        # heat rows are views and follow.  Drop the (now all-True) edge mask.
+        self.demand.take_rows(keep)
         for cache in self.caches.values():
             cache.g = gc
             cache.edge_mask = None
-            cache.heat = cache.heat[keep]
 
         # layered graph: rebuild on the renumbered graph, same thresholds
         self.lg = build_layered_graph(
@@ -774,7 +833,13 @@ class GeoGraphStore:
         ``window_s`` its ``.schedule`` holds the per-link transfer waves
         (``schedule`` picks the packing: ``"ff"`` priority-order first-fit,
         ``"lpt"`` makespan-aware).  Pure planning: the placement, route
-        index and heat state are read, never written."""
+        index and heat state are read, never written.
+
+        ``item_heat=`` / ``read_rates=`` (forwarded through ``**kw``) inject
+        the demand tables the planner optimizes against — a measured or
+        *forecast* :class:`~repro.demand.DemandView` — instead of the default
+        warm-DHD equilibrium over the static workload.  The default path is
+        unchanged, so reactive planning stays bit-identical."""
         if schedule not in ("ff", "lpt"):
             # validated here too: with window_s=None schedule_transfers (the
             # authority on packing names) never runs, and a typo'd packing
@@ -783,7 +848,10 @@ class GeoGraphStore:
         with self.tracer.span("store.plan_flush", track="store"):
             return self._plan_flush_traced(budget_bytes, window_s, schedule, **kw)
 
-    def _plan_flush_traced(self, budget_bytes, window_s, schedule, **kw):
+    def _plan_flush_traced(
+        self, budget_bytes, window_s, schedule,
+        item_heat=None, read_rates=None, **kw,
+    ):
         from ..streaming.delta_dhd import StreamingHeat
         from ..streaming.migration import plan_migrations, schedule_transfers
 
@@ -791,22 +859,28 @@ class GeoGraphStore:
         sizes = self.g.item_size()
         if budget_bytes is None:
             budget_bytes = 0.05 * float(sizes.sum())
-        if self._heat is None or self._heat.heat is None:
-            # never churned: cold-solve the equilibrium once
-            self._heat = StreamingHeat()
-            alive_e, w_e, q = self._heat_inputs()
-            self._heat.rebuild(self.g.n_nodes, self.g.src[alive_e], self.g.dst[alive_e], w_e, q)
-        vheat = self._heat.vertex_heat
-        eheat = 0.5 * (vheat[self.g.src] + vheat[self.g.dst])
         if self._delta_graph is not None:
             item_alive = np.concatenate(
                 [self._delta_graph.node_alive, self._delta_graph.edge_alive]
             )
         else:
             item_alive = np.ones(self.g.n_items, dtype=bool)
-        item_heat = np.concatenate([vheat, eheat]) * item_alive
+        if item_heat is None:
+            # reactive default: warm-DHD equilibrium over the workload tables
+            if self._heat is None or self._heat.heat is None:
+                # never churned: cold-solve the equilibrium once
+                self._heat = StreamingHeat()
+                alive_e, w_e, q = self._heat_inputs()
+                self._heat.rebuild(self.g.n_nodes, self.g.src[alive_e], self.g.dst[alive_e], w_e, q)
+            vheat = self._heat.vertex_heat
+            eheat = 0.5 * (vheat[self.g.src] + vheat[self.g.dst])
+            item_heat = np.concatenate([vheat, eheat]) * item_alive
+        else:
+            # injected demand-plane view (measured or forecast): no DHD solve
+            item_heat = np.asarray(item_heat, dtype=np.float64) * item_alive
+        r_xy = self.workload.r_xy if read_rates is None else np.asarray(read_rates)
         plan = plan_migrations(
-            self.g, self.env, self.state, self.workload.r_xy, self.workload.w_xy,
+            self.g, self.env, self.state, r_xy, self.workload.w_xy,
             item_heat, budget_bytes, item_alive=item_alive, **kw,
         )
         if window_s is not None:
@@ -842,11 +916,24 @@ class GeoGraphStore:
         epoch = self._id_epoch
         applier = WaveApplier(
             plan, self.state, self.env, self.workload.patterns,
-            self.workload.r_xy, self.g.item_size(), self.config.gamma_max_s,
+            self._guard_rates(kw), self.g.item_size(), self.config.gamma_max_s,
             route_index=self.route_index,
             valid_check=lambda: self._id_epoch == epoch,
         )
         return plan, applier
+
+    def _guard_rates(self, plan_kw) -> np.ndarray:
+        """The demand table the Eq. 6 constraint guard holds the flush to.
+
+        Plan and guard must judge the same demand: a plan made against an
+        injected measured/forecast ``read_rates`` view, but guarded against
+        the offline workload's ``r_xy``, would see every demand-cold drop as
+        an SLO regression on synthetic reads nobody issues any more — and
+        the guard would roll back all drops, forever."""
+        rates = plan_kw.get("read_rates")
+        if rates is None:
+            return self.workload.r_xy
+        return np.asarray(rates, dtype=np.float64)
 
     def flush_migrations(
         self,
@@ -877,7 +964,7 @@ class GeoGraphStore:
         plan = self.plan_flush(budget_bytes, window_s, schedule=schedule, **kw)
         apply_plan(
             plan, self.state, self.env, self.workload.patterns,
-            self.workload.r_xy, self.g.item_size(), self.config.gamma_max_s,
+            self._guard_rates(kw), self.g.item_size(), self.config.gamma_max_s,
             route_index=self.route_index,
             schedule=plan.schedule,
             on_wave=on_wave,

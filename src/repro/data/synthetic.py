@@ -4,13 +4,18 @@ structure, geo partitions.  Scaled-down but structure-preserving (DESIGN §9).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.graph import Graph
 
-__all__ = ["rmat_graph", "community_graph", "make_benchmark_graph"]
+__all__ = [
+    "rmat_graph",
+    "community_graph",
+    "make_benchmark_graph",
+    "diurnal_demand_trace",
+]
 
 
 def _geo_partition(n: int, n_dcs: int, rng: np.random.Generator) -> np.ndarray:
@@ -124,6 +129,74 @@ def community_graph(
         edge_size=esizes,
         partition=partition.astype(np.int32),
     )
+
+
+def diurnal_demand_trace(
+    patterns: Sequence,
+    n_dcs: int,
+    n_requests: int,
+    period_s: float,
+    n_periods: int = 2,
+    kappa: float = 6.0,
+    locality: float = 0.9,
+    seed: int = 0,
+    deadline_s: Optional[float] = None,
+    priority: int = 0,
+) -> Tuple[List[Tuple[float, np.ndarray, int, int, Optional[float]]], np.ndarray]:
+    """Follow-the-sun request trace: the demand peak sweeps across the DCs.
+
+    Per-origin arrival intensity is a von-Mises bump over the diurnal phase,
+    centred at phase ``d / n_dcs`` for DC *d* — as simulated time advances
+    one ``period_s``, the traffic peak visits every DC once, in order (the
+    workload of the paper's geo-distributed setting: each region is busy
+    during its local daytime).  Each request draws a pattern *homed* at its
+    origin with probability ``locality`` (home = pattern index mod
+    ``n_dcs``), so the hot item set rotates with the peak and placement has
+    something to chase.
+
+    Returns ``(rows, handoffs)``:
+
+    * ``rows`` — ``(t, items, origin, priority, deadline_s)`` tuples sorted
+      by arrival time, feedable straight into ``StoreClient.submit(...,
+      at=t)``;
+    * ``handoffs`` — the analytic peak-handoff instants ``period_s * (c +
+      (d + 0.5) / n_dcs)``, midway between consecutive DC peaks: the moments
+      a reactive placement is stalest and a one-window-ahead forecast pays.
+    """
+    if n_dcs < 1:
+        raise ValueError(f"need at least one DC, got {n_dcs}")
+    if not patterns:
+        raise ValueError("need at least one pattern")
+    rng = np.random.default_rng(seed)
+    total_s = float(n_periods) * float(period_s)
+    t = np.sort(rng.uniform(0.0, total_s, size=int(n_requests)))
+    phase = t / float(period_s)
+    # von-Mises-shaped origin weights, peak for DC d at phase d/n_dcs
+    ang = 2.0 * np.pi * (phase[:, None] - np.arange(n_dcs)[None, :] / n_dcs)
+    w = np.exp(kappa * (np.cos(ang) - 1.0))
+    w /= w.sum(axis=1, keepdims=True)
+    u = rng.random(len(t))
+    origins = (w.cumsum(axis=1) < u[:, None]).sum(axis=1)
+    home = np.arange(len(patterns)) % n_dcs
+    by_home = [np.where(home == d)[0] for d in range(n_dcs)]
+    rows: List[Tuple[float, np.ndarray, int, int, Optional[float]]] = []
+    for k in range(len(t)):
+        d = int(origins[k])
+        pool = by_home[d]
+        if len(pool) and rng.random() < locality:
+            pi = int(pool[rng.integers(0, len(pool))])
+        else:
+            pi = int(rng.integers(0, len(patterns)))
+        rows.append((float(t[k]), patterns[pi].items, d, priority, deadline_s))
+    handoffs = np.array(
+        [
+            period_s * (c + (d + 0.5) / n_dcs)
+            for c in range(int(n_periods))
+            for d in range(n_dcs)
+        ],
+        dtype=np.float64,
+    )
+    return rows, handoffs
 
 
 def make_benchmark_graph(name: str, seed: int = 0, n_dcs: int = 5) -> Graph:

@@ -1,0 +1,38 @@
+"""Demand plane: the single owner of online request heat and its forecasts.
+
+Before this package, per-(origin DC, region) request heat was bookkept three
+times over — ``GeoGraphStore`` scattered observations into per-DC
+``HeatCache`` arrays, ``core.placement`` kept its own copies for eviction,
+and ``serve.policy`` triggered maintenance off yet another view.  The
+:class:`ODDemandLayer` (origin-destination demand, after MnMS's
+``OriginDestinationLayer``) now owns the one ``[D, n_items]`` heat table:
+
+  * the serving path (``serve_online`` / ``serve_batch``) deposits request
+    heat here, and every :class:`~repro.core.placement.HeatCache` reads its
+    per-DC row as a shared-storage view (Alg. 3 eviction semantics intact);
+  * windowed origin-destination statistics (per-window intensity history,
+    EWMA read rates, per-origin item profiles) feed both the *measured*
+    demand view the reactive policy plans against and the *forecast* view a
+    predictive :class:`~repro.serve.MaintenancePolicy` pre-stages against;
+  * a pluggable :class:`Forecaster` (EWMA / seasonal diurnal-decomposition)
+    predicts per-origin intensity one window ahead; forecast error is
+    settled against realized intensity through the obs registry.
+"""
+from .forecast import (  # noqa: F401
+    EWMAForecaster,
+    Forecaster,
+    PersistenceForecaster,
+    SeasonalForecaster,
+    ZeroForecaster,
+)
+from .od_layer import DemandView, ODDemandLayer  # noqa: F401
+
+__all__ = [
+    "ODDemandLayer",
+    "DemandView",
+    "Forecaster",
+    "EWMAForecaster",
+    "SeasonalForecaster",
+    "PersistenceForecaster",
+    "ZeroForecaster",
+]

@@ -416,10 +416,11 @@ class ShardedGeoGraphStore:
         if self.fetch_payload:
             self._fetch_rows(jobs, norm)
         if observe and norm:
-            # heat injection grouped per origin, exactly like the inner store
+            # heat injection grouped per origin into the shared demand plane,
+            # exactly like the inner store
             for o, pos_list in by_origin.items():
-                self._store.caches[o].observe(
-                    np.concatenate([norm[p][0] for p in pos_list])
+                self._store.demand.observe(
+                    np.concatenate([norm[p][0] for p in pos_list]), origin=o
                 )
         return results
 

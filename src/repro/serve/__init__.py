@@ -7,12 +7,10 @@ scheduler with latency-aware adaptive batching and per-origin fairness,
 migration waves / compaction / heat maintenance into idle gaps and feeds
 measured wave transfer times back into the window estimate.
 
-``GraphFrontend`` survives as a deprecated shim; :mod:`repro.serve.engine`
-is the per-site LM slot engine (unrelated to the graph-store path) and is
-imported lazily to keep the control plane jax-free.
+:mod:`repro.serve.engine` is the per-site LM slot engine (unrelated to the
+graph-store path) and is imported lazily to keep the control plane jax-free.
 """
 from .client import BULK, INTERACTIVE, RequestHandle, StoreClient  # noqa: F401
-from .graph_frontend import GraphFrontend, GraphRequest  # noqa: F401
 from .policy import MaintenanceConfig, MaintenancePolicy  # noqa: F401
 from .scheduler import (  # noqa: F401
     AdmissionConfig,
@@ -32,8 +30,6 @@ __all__ = [
     "SimClock",
     "MaintenanceConfig",
     "MaintenancePolicy",
-    "GraphFrontend",
-    "GraphRequest",
 ]
 
 

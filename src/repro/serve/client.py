@@ -13,10 +13,9 @@ control problem):
   * ``MaintenancePolicy`` (:mod:`repro.serve.policy`) — background work in
     the idle gaps.
 
-Handles replace the integer request ids of the deprecated
-``GraphFrontend``: the result, dispatch/completion timestamps and
-deadline-miss verdict live on the handle itself, so no side-table lookup
-survives the drain.
+Handles replace the integer request ids of the retired FIFO frontend: the
+result, dispatch/completion timestamps and deadline-miss verdict live on
+the handle itself, so no side-table lookup survives the drain.
 """
 from __future__ import annotations
 

@@ -22,6 +22,17 @@ EWMA of ``estimated / measured`` in :attr:`window_gain` and plans the next
 flush with ``effective_window() = window_s * window_gain`` — links that ship
 slower than Table I says shrink the byte budget per wave until estimates and
 measurements agree, links that ship faster widen it.
+
+**Predictive mode** (``predictive=True``): every time the store's demand
+plane closes a window, the policy forecasts per-origin demand one window
+ahead (:class:`~repro.demand.Forecaster` over the
+:class:`~repro.demand.ODDemandLayer` history) and *pre-stages* replicas
+against the forecast heat through the same ``begin_flush`` → wave machinery
+— adds only (``theta_drop=0``), landed in idle gaps before the demand
+arrives, epoch guards unchanged.  Each pre-staged replica is held in a
+ledger and settled one window later against the demand plane's cumulative
+od table: ``placement.prestage_hit`` if the destination DC actually read it,
+``placement.prestage_wasted`` otherwise.
 """
 from __future__ import annotations
 
@@ -29,6 +40,8 @@ import dataclasses
 import math
 from collections import deque
 from typing import Callable, Deque, Dict, Optional, Tuple
+
+import numpy as np
 
 from ..streaming.migration import StaleFlushError
 
@@ -50,6 +63,18 @@ class MaintenanceConfig:
     min_window_gain: float = 0.05
     max_window_gain: float = 4.0
     plan_kw: Dict[str, object] = dataclasses.field(default_factory=dict)
+    # ---- demand-plane planning ------------------------------------------
+    # "store": periodic flushes plan against the store's warm-DHD
+    # equilibrium over the static workload (the legacy reactive source).
+    # "measured": they plan against the demand plane's measured EWMA view —
+    # reacting to the traffic actually served.
+    heat_source: str = "store"
+    # ---- predictive pre-staging -----------------------------------------
+    predictive: bool = False  # forecast-driven pre-stage flushes
+    forecaster: Optional[object] = None  # demand.Forecaster (default: EWMA)
+    prestage_horizon: int = 1  # demand windows ahead to forecast
+    prestage_budget_frac: Optional[float] = None  # None = budget_frac/store default
+    prestage_theta_add: float = 0.5  # add quantile for pre-stage plans
 
 
 class MaintenancePolicy:
@@ -95,6 +120,23 @@ class MaintenancePolicy:
         self.n_compactions = 0
         self.n_stale_flushes = 0  # appliers abandoned to an id-space change
         self.last_maintain_report: Optional[Dict[str, float]] = None
+        # predictive pre-staging state
+        self.forecaster = self.cfg.forecaster
+        if self.cfg.predictive and self.forecaster is None:
+            from ..demand import EWMAForecaster
+
+            self.forecaster = EWMAForecaster()
+        self._applier_prestage = False  # current applier is a pre-stage flush
+        self._last_prestage_window = -1
+        # planner-scaled (item_heat, read_rates) of the newest forecast,
+        # folded into measured flushes so they don't undo fresh pre-stages
+        self._last_forecast: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        # (id epoch, demand window, dst DC, items, od snapshot) per landed
+        # pre-stage transfer; settled one full demand window later
+        self._prestage_ledger: Deque[Tuple] = deque(maxlen=4096)
+        self.n_prestage_flushes = 0
+        self.prestage_hits = 0
+        self.prestage_wasted = 0
 
     # ------------------------------------------------------------- triggers
     def request_flush(self, **plan_kw) -> None:
@@ -192,6 +234,11 @@ class MaintenancePolicy:
         outstanding.  Waves and ``maintain()`` only change replica sets,
         never item ids, so they run regardless."""
         used = 0.0
+        demand = getattr(self.store, "demand", None)
+        if demand is not None:
+            demand.advance_to(now)
+            if self._prestage_ledger:
+                self._settle_prestaged(demand)
         if self._flush_due(now):
             budget = (
                 None if self.cfg.budget_frac is None
@@ -199,17 +246,74 @@ class MaintenancePolicy:
             )
             kw = dict(self.cfg.plan_kw)
             kw.update(self._flush_kw)
+            if self.cfg.heat_source == "measured" and demand is not None:
+                # plan against the traffic actually served (demand plane).
+                # In predictive mode, fold the latest forecast in elementwise
+                # (max): dropping a replica the policy *just* pre-staged for
+                # the next window, because the measured view hasn't seen its
+                # demand yet, would be incoherent.
+                heat, rates = self._planner_scale(demand.measured())
+                if self._last_forecast is not None:
+                    f_heat, f_rates = self._last_forecast
+                    if f_heat.shape == heat.shape:
+                        heat = np.maximum(heat, f_heat)
+                        rates = np.maximum(rates, f_rates)
+                kw.setdefault("item_heat", heat)
+                kw.setdefault("read_rates", rates)
             plan, self._applier = self.store.begin_flush(
                 budget_bytes=budget,
                 window_s=self.effective_window(),
                 schedule=self.cfg.packing,
                 **kw,
             )
+            self._applier_prestage = False
             self.plans.append(plan)
             self._flush_requested = False
             self._flush_kw = {}
             self._last_flush = now
             self.n_flushes += 1
+        elif (
+            self._applier is None
+            and self.cfg.predictive
+            and demand is not None
+            and len(demand.history)
+            and demand.window_index > self._last_prestage_window
+        ):
+            # pre-stage flush: plan adds against *forecast* demand one window
+            # ahead; waves land through the shared idle-gap loop below with
+            # the epoch guards unchanged.  Never drops — the forecast earns
+            # replicas, evicting on it is the measured paths' job.
+            self._last_prestage_window = demand.window_index
+            view = demand.forecast(
+                self.forecaster, horizon=self.cfg.prestage_horizon
+            )
+            frac = (
+                self.cfg.prestage_budget_frac
+                if self.cfg.prestage_budget_frac is not None
+                else self.cfg.budget_frac
+            )
+            budget = (
+                None if frac is None
+                else frac * float(self.store.g.item_size().sum())
+            )
+            heat, rates = self._planner_scale(view)
+            self._last_forecast = (heat, rates)
+            kw = dict(self.cfg.plan_kw)
+            kw["item_heat"] = heat
+            kw["read_rates"] = rates
+            kw.setdefault("theta_add", self.cfg.prestage_theta_add)
+            kw["theta_drop"] = 0.0
+            plan, self._applier = self.store.begin_flush(
+                budget_bytes=budget,
+                window_s=self.effective_window(),
+                schedule=self.cfg.packing,
+                **kw,
+            )
+            self._applier_prestage = True
+            self.plans.append(plan)
+            self.n_prestage_flushes += 1
+            if plan.schedule is not None:
+                self._ledger_moves(demand, plan.schedule.local)
         # 1. land transfer waves while they fit (always at least one: a wave
         # wider than every gap must not stall the flush forever).  A
         # StaleFlushError (mutation/compaction renumbered ids mid-flight)
@@ -221,6 +325,7 @@ class MaintenancePolicy:
                 if wave is None:
                     self._applier.finish()  # drops release + constraint guard
                     self._applier = None
+                    self._applier_prestage = False
                     break
                 expected = wave.makespan_s / max(self.window_gain, 1e-9)
                 if used + expected > gap_s and not (used == 0.0 and expected > gap_s):
@@ -229,8 +334,12 @@ class MaintenancePolicy:
             except StaleFlushError:
                 self._applier = None
                 self.n_stale_flushes += 1
-                self._flush_requested = True  # re-plan against the new ids
+                if not self._applier_prestage:
+                    self._flush_requested = True  # re-plan against the new ids
+                self._applier_prestage = False
                 break
+            if self._applier_prestage and demand is not None:
+                self._ledger_wave(demand, wave)
             measured = (
                 self.measure_wave(wave) if self.measure_wave is not None
                 else wave.makespan_s
@@ -264,6 +373,78 @@ class MaintenancePolicy:
             used += self.cfg.maintain_cost_s
         return used
 
+    def _planner_scale(self, view) -> Tuple[np.ndarray, np.ndarray]:
+        """Rescale a demand view to the workload's planner units.
+
+        The demand plane reports true per-second rates; the migration
+        planner's cost model (Eq. 14) was calibrated against the offline
+        workload's ``r_xy``/``w_xy`` magnitudes, so per-second rates next to
+        workload-scale write costs would price every add out.  Treating the
+        view as a *redistribution* of the workload's total read volume keeps
+        the read/write economics consistent.  An all-zero view passes
+        through untouched (the zero-forecast differential relies on it
+        producing an empty plan)."""
+        wl = getattr(self.store, "workload", None)
+        total = float(view.read_rates.sum())
+        if wl is None or total <= 0.0:
+            return view.item_heat, view.read_rates
+        scale = float(wl.r_xy.sum()) / total
+        return view.item_heat * scale, view.read_rates * scale
+
+    # ------------------------------------------------------- prestage ledger
+    def _ledger_wave(self, demand, wave) -> None:
+        """Record one landed pre-stage wave: per destination DC, the shipped
+        items and the demand plane's cumulative od weight at landing time."""
+        epoch = getattr(self.store, "_id_epoch", 0)
+        for b in wave.links:
+            items = np.asarray(b.items)
+            self._prestage_ledger.append((
+                epoch, demand.window_index, int(b.dst), items.copy(),
+                demand.od[b.dst, items].copy(),
+            ))
+
+    def _ledger_moves(self, demand, moves) -> None:
+        """Record zero-byte local pre-stage adds (src == dst moves)."""
+        if not moves:
+            return
+        epoch = getattr(self.store, "_id_epoch", 0)
+        by_dc: Dict[int, list] = {}
+        for m in moves:
+            by_dc.setdefault(int(m.dc), []).append(int(m.item))
+        for dc, its in by_dc.items():
+            items = np.asarray(its, dtype=np.int64)
+            self._prestage_ledger.append((
+                epoch, demand.window_index, dc, items,
+                demand.od[dc, items].copy(),
+            ))
+
+    def _settle_prestaged(self, demand) -> None:
+        """Settle ledger entries at least one full demand window old: a
+        pre-staged replica *hit* if its destination DC accumulated new od
+        weight on the item since landing (the monotone od table is immune to
+        diffusion/decay), else it was *wasted* WAN + storage.  Entries from a
+        renumbered id space are unverifiable and dropped silently."""
+        epoch = getattr(self.store, "_id_epoch", 0)
+        reg = self._reg()
+        keep: Deque[Tuple] = deque(maxlen=self._prestage_ledger.maxlen)
+        for entry in self._prestage_ledger:
+            e_epoch, e_win, dc, items, od0 = entry
+            if e_epoch != epoch:
+                continue
+            if demand.window_index <= e_win:
+                keep.append(entry)  # target window still open
+                continue
+            hits = int((demand.od[dc, items] > od0).sum())
+            wasted = int(len(items) - hits)
+            self.prestage_hits += hits
+            self.prestage_wasted += wasted
+            if reg.enabled:
+                if hits:
+                    reg.counter("placement.prestage_hit").inc(hits)
+                if wasted:
+                    reg.counter("placement.prestage_wasted").inc(wasted)
+        self._prestage_ledger = keep
+
     def _trace_simple(self, name: str, t0: float, cost_s: float) -> None:
         if self.tracer is not None and self.tracer.enabled:
             self.tracer.record(name, t0, t0 + cost_s, track="maintenance")
@@ -283,4 +464,7 @@ class MaintenancePolicy:
             "window_gain": self.window_gain,
             "effective_window_s": self.effective_window(),
             "flush_in_progress": self.flush_in_progress,
+            "n_prestage_flushes": self.n_prestage_flushes,
+            "prestage_hits": self.prestage_hits,
+            "prestage_wasted": self.prestage_wasted,
         }

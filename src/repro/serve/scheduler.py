@@ -1,8 +1,8 @@
 """Event-driven admission control with latency-aware adaptive batching.
 
-The :class:`AdmissionController` replaces the deprecated synchronous
-``GraphFrontend`` drain loop with an event-loop scheduler on a **simulated
-clock** (deterministic, no threads):
+The :class:`AdmissionController` replaces the old synchronous FIFO drain
+loop with an event-loop scheduler on a **simulated clock** (deterministic,
+no threads):
 
   * requests arrive (immediately or on a replayed trace via ``at=``), are
     queued per ``(priority class, origin DC)``, and drain in batches through
@@ -226,6 +226,10 @@ class AdmissionController:
         if callable(register):
             register(self._remap_pending_items)
             self._remap_registered = True
+        # the store's demand plane windows on this scheduler's clock; total
+        # idle time is what pre-staging can hide migration work inside
+        self._demand = getattr(store, "demand", None)
+        self.idle_s = 0.0
 
     def _remap_pending_items(self, imap: np.ndarray) -> None:
         """Re-key every unserved handle's item rows after a compaction
@@ -386,6 +390,8 @@ class AdmissionController:
         attached maintenance policy).  Returns ``[]`` with nothing pending
         and nothing scheduled."""
         self._admit_due()
+        if self._demand is not None:
+            self._demand.advance_to(self.clock.now())
         shard_key: Optional[int] = None
         if self.cfg.per_shard_aimd and self._n_pending:
             shard_key = self._next_shard_key()
@@ -414,6 +420,8 @@ class AdmissionController:
                     self.policy.on_idle(
                         self.clock.now(), gap, quiescent=self._remap_registered
                     )
+                if gap > 0:
+                    self.idle_s += gap
                 self.clock.jump_to(t_next)
                 self._admit_due()
                 return []
@@ -564,7 +572,7 @@ class AdmissionController:
 
     def run_until_idle(self, max_steps: int = 1_000_000) -> List[RequestHandle]:
         """Drain every pending and scheduled request; returns completions in
-        completion order (the old ``GraphFrontend.flush`` contract)."""
+        completion order (the retired frontend's ``flush`` contract)."""
         done: List[RequestHandle] = []
         for _ in range(max_steps):
             if self._n_pending == 0 and not self._arrivals:
@@ -598,6 +606,7 @@ class AdmissionController:
             "batch_target": self.batch_target,
             "served_by_origin": dict(sorted(self.served_by_origin.items())),
             "sim_time_s": self.clock.now(),
+            "idle_s": self.idle_s,
         }
         if self.cfg.per_shard_aimd:
             out["batch_target_by_shard"] = dict(sorted(self._targets.items()))

@@ -11,11 +11,10 @@ Bars under test:
   * maintenance interleaving is *equivalent* to back-to-back
     ``flush_migrations`` + ``maintain`` — identical final replica sets and
     routes — and measured wave times feed back into the transfer window;
-  * the deprecated ``GraphFrontend`` shim warns and preserves its queue
-    across a mid-drain exception (legacy contract).
+  * the controller preserves its queue across a mid-drain exception (the
+    contract the removed ``GraphFrontend`` shim used to carry).
 """
 import math
-import warnings
 
 import numpy as np
 import pytest
@@ -29,7 +28,6 @@ from repro.core.store import GeoGraphStore
 from repro.serve import (
     AdmissionConfig,
     AdmissionController,
-    GraphFrontend,
     MaintenanceConfig,
     MaintenancePolicy,
     StoreClient,
@@ -455,25 +453,23 @@ def test_controller_offers_idle_gaps_to_policy():
     assert store.route_index.verify(store.state.delta)
 
 
-# ------------------------------------------------------------ legacy shim
-def test_graph_frontend_warns_and_still_works():
-    store = _store(10)
-    with pytest.warns(DeprecationWarning, match="GraphFrontend is deprecated"):
-        fe = GraphFrontend(store, max_batch=8)
-    pats = [p for p in store.workload.patterns if len(p.items)]
-    rids = [fe.submit_pattern(p, int(np.argmax(p.r_py))) for p in pats[:20]]
-    assert fe.pending == 20
-    out = fe.flush()
-    assert sorted(out.keys()) == rids
-    assert fe.pending == 0 and fe.n_served == 20
-    for p, rid in zip(pats[:20], rids):
-        ref = store.serve_online(p, int(np.argmax(p.r_py)))
-        assert np.array_equal(out[rid].served_by, ref.served_by)
+# --------------------------------------------------------- shim retirement
+def test_graph_frontend_shim_is_gone():
+    """The deprecated ``GraphFrontend``/``GraphRequest`` shim is removed: the
+    names no longer import, and the controller stack is the one entry point."""
+    import repro.serve as serve
+
+    assert "GraphFrontend" not in serve.__all__
+    assert "GraphRequest" not in serve.__all__
+    with pytest.raises(AttributeError):
+        serve.GraphFrontend
+    with pytest.raises(ImportError):
+        import repro.serve.graph_frontend  # noqa: F401
 
 
-def test_shim_preserves_queue_across_exception():
-    """The legacy mid-drain-exception contract, now through the controller's
-    requeue path."""
+def test_controller_preserves_queue_across_exception():
+    """The mid-drain-exception contract the shim used to carry, now native to
+    the controller's requeue path."""
 
     class _Flaky:
         def __init__(self, store):
@@ -488,16 +484,20 @@ def test_shim_preserves_queue_across_exception():
 
     store = _store(11)
     pats = [p for p in store.workload.patterns if len(p.items)]
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        fe = GraphFrontend(_Flaky(store), max_batch=4)
-    rids = [fe.submit_pattern(p, 0) for p in pats[:10]]
+    ctl = AdmissionController(
+        _Flaky(store),
+        AdmissionConfig(policy="greedy", fairness="fifo", max_batch=4),
+    )
+    client = StoreClient(ctl)
+    rids = [
+        client.submit(p.items, 0, deadline_s=math.inf).rid for p in pats[:10]
+    ]
     with pytest.raises(RuntimeError):
-        fe.flush()
-    assert fe.pending == 10 and fe.n_served == 0
-    assert [h.rid for h in fe.queue] == rids  # FIFO order intact
-    out = fe.flush()
-    assert sorted(out.keys()) == rids and fe.pending == 0
+        ctl.run_until_idle()
+    assert ctl.pending == 10 and ctl.completed == 0
+    assert [h.rid for h in ctl.pending_handles()] == rids  # FIFO order intact
+    done = ctl.run_until_idle()
+    assert sorted(h.rid for h in done) == rids and ctl.pending == 0
 
 
 # ---------------------------------------------------- measured service model

@@ -10,6 +10,8 @@ Differential bars:
     ``route_nearest`` re-derivation after *every* wave, so a frontend can
     serve between waves.
 """
+import math
+
 import numpy as np
 import pytest
 
@@ -19,7 +21,7 @@ from repro.core.patterns import Workload, generate_khop_patterns
 from repro.core.placement import PlacementConfig
 from repro.core.routing import route_online
 from repro.core.store import GeoGraphStore
-from repro.serve import GraphFrontend
+from repro.serve import AdmissionConfig, AdmissionController, StoreClient
 from repro.streaming import DeltaGraph, random_churn_batch
 from repro.streaming.delta_dhd import StreamingHeat
 from repro.streaming.migration import (
@@ -336,19 +338,23 @@ def test_wave_application_matches_single_shot():
     assert p_shot.schedule is None and p_wave.schedule is not None
 
 
-def test_frontend_serves_between_waves():
-    """A GraphFrontend drained inside ``on_wave`` sees a route table that is
+def test_controller_serves_between_waves():
+    """A controller drained inside ``on_wave`` sees a route table that is
     consistent with the placement at that wave boundary."""
     store = _churned_store(8)
-    fe = GraphFrontend(store, max_batch=4)
+    ctl = AdmissionController(
+        store, AdmissionConfig(policy="greedy", fairness="fifo", max_batch=4)
+    )
+    client = StoreClient(ctl)
     pats = [p for p in store.workload.patterns if len(p.items)]
     served = []
 
     def on_wave(wave):
         p = pats[wave.index % len(pats)]
         origin = int(np.argmax(p.r_py))
-        rid = fe.submit_pattern(p, origin)
-        res = fe.flush()[rid]
+        h = client.submit(p.items, origin, deadline_s=math.inf)
+        ctl.run_until_idle()
+        res = h.result
         ref = route_online(store.lg, store.state, p.items, origin)
         served.append(
             res.n_missing == 0

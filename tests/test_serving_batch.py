@@ -1,13 +1,24 @@
-"""Batched online serving: route_online_batch / serve_batch / GraphFrontend.
+"""Batched online serving: route_online_batch / serve_batch / controller drain.
 
 Correctness bar: the vectorized batch path must match ``route_online``
 request-for-request (same served_by, latency, layers, misses).
 """
+import math
+
 import numpy as np
 import pytest
 
 from repro.core.routing import route_online, route_online_batch
-from repro.serve import GraphFrontend
+from repro.serve import AdmissionConfig, AdmissionController, StoreClient
+
+
+def _fifo_stack(store, max_batch):
+    """The FIFO drain configuration the deleted GraphFrontend shim used."""
+    ctl = AdmissionController(
+        store,
+        AdmissionConfig(policy="greedy", fairness="fifo", max_batch=max_batch),
+    )
+    return ctl, StoreClient(ctl)
 
 
 def _requests(pats, n_dcs, per_pattern_origins=True):
@@ -83,21 +94,26 @@ class _FlakyStore:
 
 
 def test_flush_exception_preserves_queue(small_setup, small_store):
-    """Regression: flush() used to pop the chunk *before* serving it, so an
-    exception mid-drain silently lost every in-flight request."""
+    """Regression: the old drain loop popped a chunk *before* serving it, so
+    an exception mid-drain silently lost every in-flight request.  The
+    controller requeues the failing batch instead."""
     g, env, csr, wl, pats = small_setup
     flaky = _FlakyStore(small_store)
-    fe = GraphFrontend(flaky, max_batch=4)
-    rids = [fe.submit_pattern(p, int(np.argmax(p.r_py))) for p in pats[:10]]
+    ctl, client = _fifo_stack(flaky, max_batch=4)
+    rids = [
+        client.submit(p.items, int(np.argmax(p.r_py)), deadline_s=math.inf).rid
+        for p in pats[:10]
+    ]
     with pytest.raises(RuntimeError):
-        fe.flush()
+        ctl.run_until_idle()
     # nothing served, nothing lost — the whole queue survives the failure
-    assert fe.pending == 10
-    assert fe.n_served == 0
-    assert [r.rid for r in fe.queue] == rids  # FIFO order intact
-    out = fe.flush()  # retry drains everything
+    assert ctl.pending == 10
+    assert ctl.completed == 0
+    assert [h.rid for h in ctl.pending_handles()] == rids  # FIFO order intact
+    done = ctl.run_until_idle()  # retry drains everything
+    out = {h.rid: h.result for h in done}
     assert sorted(out.keys()) == rids
-    assert fe.pending == 0 and fe.n_served == 10
+    assert ctl.pending == 0 and ctl.completed == 10
     for p, rid in zip(pats[:10], rids):
         ref = small_store.serve_online(p, int(np.argmax(p.r_py)))
         assert np.array_equal(out[rid].served_by, ref.served_by)
@@ -119,17 +135,22 @@ def test_batch1_fast_path_parity(small_setup, small_store):
             assert s.n_missing == b.n_missing
 
 
-def test_graph_frontend_fifo_drain(small_setup, small_store):
+def test_controller_fifo_drain(small_setup, small_store):
     g, env, csr, wl, pats = small_setup
     store = small_store
-    fe = GraphFrontend(store, max_batch=8)
+    ctl, client = _fifo_stack(store, max_batch=8)
     rids = []
     for p in pats[:30]:
-        rids.append(fe.submit_pattern(p, int(np.argmax(p.r_py))))
-    assert fe.pending == 30
-    out = fe.flush()
-    assert fe.pending == 0
-    assert fe.n_served == 30
+        rids.append(
+            client.submit(
+                p.items, int(np.argmax(p.r_py)), deadline_s=math.inf
+            ).rid
+        )
+    assert ctl.pending == 30
+    done = ctl.run_until_idle()
+    out = {h.rid: h.result for h in done}
+    assert ctl.pending == 0
+    assert ctl.completed == 30
     assert sorted(out.keys()) == rids
     for p, rid in zip(pats[:30], rids):
         ref = store.serve_online(p, int(np.argmax(p.r_py)))
