@@ -7,14 +7,13 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core.cost import total_cost
 from repro.core.graph import build_csr
 from repro.core.latency import make_paper_env
 from repro.core.optimal import solve_coordinate_descent
 from repro.core.patterns import Workload, generate_khop_patterns
 from repro.data.synthetic import make_benchmark_graph
 
-from .common import csv_row, strategy_store, make_setup
+from .common import csv_row
 from repro.core.placement import PlacementConfig
 from repro.core.store import GeoGraphStore
 

@@ -22,7 +22,6 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
-import time
 from typing import Dict, List
 
 import numpy as np

@@ -8,7 +8,7 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core.placement import PlacementConfig, precache_hot_regions
+from repro.core.placement import PlacementConfig
 from repro.core.store import GeoGraphStore
 
 from .common import csv_row, make_setup

@@ -38,6 +38,7 @@ from repro.core.route_index import RouteIndex
 from repro.core.routing import route_online, route_online_batch
 from repro.core.store import GeoGraphStore
 from repro.data.synthetic import community_graph
+from repro.debug.sanitize import maybe_attach
 from repro.streaming import DeltaGraph, random_churn_batch
 
 from .common import csv_row, timed
@@ -377,6 +378,10 @@ def run(fast: bool = True, smoke: bool = False, tune: bool = False) -> None:
         n_patterns = 120 if fast else 360
         sizes = [1, 4, 16, 64, 256, 1024]
     store = _build_store(n_vertices, n_patterns)
+    # REPRO_SANITIZE=1 wires low-frequency runtime invariant checks into
+    # every store mutation below (no-op otherwise) — the CI smoke lane runs
+    # with it on, so the serving path exercises the sanitizer for free
+    sanitizer = maybe_attach(store)
     results: Dict = {
         "n_items": int(store.g.n_items),
         "n_dcs": int(store.env.n_dcs),
@@ -403,6 +408,12 @@ def run(fast: bool = True, smoke: bool = False, tune: bool = False) -> None:
         _smoke_kernel_lane()
         if tune:
             _autotune_lane(store, results, batch=64)
+        if sanitizer is not None:
+            sanitizer.check()  # explicit end-of-lane sweep of every invariant
+            print(csv_row(
+                "serving_sanitize", 0.0,
+                f"checks_run={sanitizer.checks_run};invariants=ok",
+            ))
         print("# smoke OK (BENCH_serving.json not rewritten)")
         return
     # fast-path lane on a 100k+-item store (bigger graph, deeper k-hop
@@ -418,6 +429,8 @@ def run(fast: bool = True, smoke: bool = False, tune: bool = False) -> None:
     if tune:
         _autotune_lane(big, results, batch=256)
     _patch_vs_reroute(store, results, n_flushes=4 if fast else 8)
+    if sanitizer is not None:
+        sanitizer.check()
 
     at256 = next(r for r in results["batch_sweep"] if r["batch"] == 256)
     results["accept_batch256_speedup_ge_5x"] = bool(at256["speedup"] >= 5.0)

@@ -13,7 +13,6 @@ CSV derived fields: ``speedup`` (rebuild / incremental, acceptance >= 5x at
 """
 from __future__ import annotations
 
-import time
 from typing import List
 
 import numpy as np

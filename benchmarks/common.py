@@ -8,13 +8,12 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.cost import CostBreakdown, PlacementState
 from repro.core.graph import Graph, build_csr
-from repro.core.latency import GeoEnvironment, make_paper_env, make_synthetic_env
+from repro.core.latency import GeoEnvironment, make_paper_env
 from repro.core.patterns import Pattern, Workload, generate_khop_patterns
 from repro.core.placement import PlacementConfig
 from repro.core.store import GeoGraphStore

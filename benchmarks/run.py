@@ -6,7 +6,6 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo contract.
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 

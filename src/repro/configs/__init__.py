@@ -18,7 +18,12 @@ _MODULES = [
     "bst",
 ]
 
-_REGISTRY: Dict[str, ArchSpec] = {}
+_REGISTRY: Dict[str, ArchSpec] = {}  # geolint: allow[GL001]
+
+
+def reset_arch_registry() -> None:
+    """Drop the lazily-imported arch table (re-imported on next access)."""
+    _REGISTRY.clear()
 
 
 def _load() -> None:

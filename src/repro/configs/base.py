@@ -13,17 +13,16 @@ equiformer-v2's edge-chunk scan on huge graphs — corrected analytically
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ..distributed.sharding import param_spec_bst, param_spec_gnn, param_spec_lm
 from ..models import transformer as tf
-from ..models.layers import cross_entropy, mlp, mlp_init
+from ..models.layers import cross_entropy
 from ..models.recsys.bst import (
     BSTSpec,
     bst_forward,

@@ -2,7 +2,6 @@
 vocab=102400, MoE: 64 routed experts top-6 + 2 shared, d_ff_expert=1408
 [arXiv:2405.04434; hf].  Assignment note lists "160 routed" (full V2);
 we follow the inline 64e spec, which matches the hf V2-Lite card."""
-import jax.numpy as jnp
 
 from ..models.transformer import LMConfig
 from .base import LMArch

@@ -2,11 +2,9 @@
 SO(2)-eSCN convolutions [arXiv:2306.12059].  Huge-edge shapes run the
 edge-chunked online-softmax path; those cells carry a flops correction
 (= n_chunks) because XLA costs scan bodies once."""
-import jax
-import jax.numpy as jnp
 
 from ..models.gnn.equiformer_v2 import EqV2Spec, eqv2_forward, eqv2_init
-from .base import GNNArch, GNN_SHAPES
+from .base import GNNArch
 
 _FULL = EqV2Spec(n_layers=12, channels=128, l_max=6, m_max=2, n_heads=8, n_rbf=32)
 _SMOKE = EqV2Spec(n_layers=2, channels=8, l_max=2, m_max=1, n_heads=2, n_rbf=8)

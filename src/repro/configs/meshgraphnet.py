@@ -1,7 +1,6 @@
 """meshgraphnet [gnn]: 15 processor steps, d_hidden=128, sum aggregation,
 2-layer MLPs [arXiv:2010.03409].  Edge features derived from pos (rel-pos +
 norm), the standard MGN encoding."""
-import jax
 import jax.numpy as jnp
 
 from ..models.gnn.meshgraphnet import mgn_forward, mgn_init

@@ -1,10 +1,9 @@
 """schnet [gnn]: 3 interactions, d_hidden=64, 300 Gaussian RBFs, 10 A cutoff
 [arXiv:1706.08566].  Feature graphs use x @ embed (soft species)."""
 import jax
-import jax.numpy as jnp
 
 from ..models.gnn.schnet import schnet_forward, schnet_init
-from ..models.layers import mlp, mlp_init
+from ..models.layers import mlp_init
 from .base import GNNArch
 
 _FULL = dict(n_interactions=3, d_hidden=64, n_rbf=300, cutoff=10.0)

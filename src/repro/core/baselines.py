@@ -16,7 +16,7 @@ Offline-mode competitors (vs stepwise offline routing):
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 

@@ -13,7 +13,7 @@ benchmarks and tests evaluate every strategy against.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -259,7 +259,6 @@ def check_constraints(
                 break
     ok["b_pattern_route_on_replica"] = ok_b
     # (c) average read latency <= Gamma_max
-    lat_dy = env.rtt_s + 0.0
     num = 0.0
     den = 0.0
     for y in range(D):

@@ -7,7 +7,7 @@ produced here as jnp arrays.  All structures are immutable-by-convention.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 

@@ -8,7 +8,7 @@ Request latency follows Eq. (1):  l = RTT + size / BW.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 

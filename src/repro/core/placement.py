@@ -36,7 +36,7 @@ from ..obs import get_registry
 from .cost import PlacementState
 from .graph import Graph
 from .latency import GeoEnvironment
-from .layered_graph import BridgeSubgraph, LayeredGraph
+from .layered_graph import LayeredGraph
 from .patterns import (
     OverlapRegion,
     Pattern,
@@ -815,6 +815,7 @@ def step_heat_caches(caches: Sequence[HeatCache], n_steps: int = 4) -> None:
         params=lead.params, n_steps=n_steps,
     )
     decay = (1.0 - lead.params.gamma) ** n_steps
+    # heat is single-owned by the demand layer: diffusion results go back
+    # through its write-back, never through the HeatCache.heat view (GL003)
     for c, row in zip(caches, h):
-        c.heat[:n] = row
-        c.heat[n:] *= decay
+        c.demand.apply_diffusion(c._row, row, decay)

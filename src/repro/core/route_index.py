@@ -30,7 +30,7 @@ patches immediately.  ``verify`` cross-checks against a from-scratch
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Sequence, Tuple
 
 import numpy as np
 

@@ -39,7 +39,7 @@ __all__ = [
 
 # precomputed per-layer tag keys: the 5% telemetry budget on the batch
 # serving path leaves no room for per-call tag normalization
-_LAYER_TAGS: Dict[int, Tuple[Tuple[str, str], ...]] = {}
+_LAYER_TAGS: Dict[int, Tuple[Tuple[str, str], ...]] = {}  # geolint: allow[GL001]
 
 
 def _layer_tags(layer: int) -> Tuple[Tuple[str, str], ...]:
@@ -120,7 +120,7 @@ class RouteFastConfig:
     max_dcs: int = 31
 
 
-_FAST_CONFIG = RouteFastConfig()
+_FAST_CONFIG = RouteFastConfig()  # geolint: allow[GL001]
 
 
 def get_route_fast_config() -> RouteFastConfig:
@@ -362,8 +362,8 @@ def _observe_scalar(
 
 # jax + kernels are imported lazily on the first fast-path call: the numpy
 # router must keep working (and importing fast) when jax is unavailable
-_KOPS = None
-_KOPS_FAILED = False
+_KOPS = None  # geolint: allow[GL001]
+_KOPS_FAILED = False  # geolint: allow[GL001]
 
 
 def _get_kops():
@@ -400,7 +400,20 @@ def _fast_eligible(
 # that never change.  Keyed on id(lg) with the lg kept referenced, so a
 # live entry's key cannot be recycled; one entry suffices (one store per
 # process; shards share the lg).
-_FAST_ENV_CACHE: Dict[int, Tuple[LayeredGraph, tuple]] = {}
+_FAST_ENV_CACHE: Dict[int, Tuple[LayeredGraph, tuple]] = {}  # geolint: allow[GL001]
+
+
+def reset_routing_caches() -> None:
+    """Reset every module-level routing cache/singleton: the per-layer tag
+    intern table, the fast-path config, the lazy kernels import memo and the
+    per-graph device-array cache.  Test isolation hook — everything here
+    rebuilds lazily on next use."""
+    global _FAST_CONFIG, _KOPS, _KOPS_FAILED
+    _LAYER_TAGS.clear()
+    _FAST_ENV_CACHE.clear()
+    _FAST_CONFIG = RouteFastConfig()
+    _KOPS = None
+    _KOPS_FAILED = False
 
 
 def _fast_env_arrays(lg: LayeredGraph) -> tuple:

@@ -17,7 +17,7 @@ from . import baselines
 from ..demand import ODDemandLayer
 from ..obs import Tracer, get_registry
 from .cost import CostBreakdown, PlacementState, check_constraints, total_cost
-from .graph import Graph, build_csr, grow_item_rows
+from .graph import Graph, grow_item_rows
 from .latency import GeoEnvironment
 from .layered_graph import LayeredGraph, build_layered_graph, repair_layered_graph
 from .patterns import Pattern, Workload

@@ -6,11 +6,10 @@ makes the layered graph's Layer_0 meaningful.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import numpy as np
 
-from ..core.graph import CSR, build_csr
+from ..core.graph import build_csr
 
 __all__ = ["hash_partition", "balanced_bfs_partition", "edge_cut"]
 

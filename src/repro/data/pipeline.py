@@ -7,10 +7,9 @@ requirement (no data skew/repeat after restart).
 """
 from __future__ import annotations
 
-import dataclasses
 import queue
 import threading
-from typing import Callable, Dict, Iterator, Optional, Sequence
+from typing import Dict, Iterator
 
 import numpy as np
 

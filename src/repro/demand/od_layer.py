@@ -245,6 +245,20 @@ class ODDemandLayer:
             horizon=int(horizon),
         )
 
+    def apply_diffusion(
+        self, row: int, vertex_heat: np.ndarray, tail_decay: float
+    ) -> None:
+        """Write one DC's diffused heat field back into the owned table.
+
+        The DHD step (``step_heat_caches``) reads heat *views*, diffuses the
+        vertex block and decays the edge tail — but the ``[D, I]`` table is
+        single-owned here, so the result comes back through this method
+        rather than through a write to the ``HeatCache.heat`` view (the
+        exactly-once-deposit invariant geolint GL003 enforces)."""
+        n = len(vertex_heat)
+        self.heat[row, :n] = vertex_heat
+        self.heat[row, n:] *= tail_decay
+
     # ----------------------------------------------------- id-space remapping
     def grow_items(self, old_n_nodes: int, n_new_vertices: int, n_new_edges: int) -> None:
         """Grow every item-indexed table for a mutation batch, preserving the

@@ -21,7 +21,6 @@ def pmean_tree(tree: Any, axis_name: str) -> Any:
 def all_to_all_tokens(x: jnp.ndarray, axis_name: str, split_axis: int = 0,
                       concat_axis: int = 0) -> jnp.ndarray:
     """Expert-parallel token exchange (inside shard_map)."""
-    n = jax.lax.psum(1, axis_name)
     return jax.lax.all_to_all(x, axis_name, split_axis, concat_axis, tiled=True)
 
 

@@ -14,8 +14,7 @@ the mesh has a pod axis (DESIGN §7).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ tests and the quickstart example end-to-end.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax

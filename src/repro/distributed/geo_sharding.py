@@ -22,7 +22,7 @@ verify a mesh-level layered graph has exactly 2 bridge layers (ICI, DCN).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional
 
 import numpy as np
 

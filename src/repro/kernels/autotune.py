@@ -177,7 +177,7 @@ class Autotuner:
         self._table.clear()
 
 
-_AUTOTUNER = Autotuner()
+_AUTOTUNER = Autotuner()  # geolint: allow[GL001] — singleton with reset()
 
 
 def get_autotuner() -> Autotuner:

@@ -125,8 +125,15 @@ def attention(
 # must not be mutated in place afterwards (jnp arrays — the expected input —
 # are immutable; numpy callers must replace, not rewrite, their buffers), or
 # the identity key would serve the pre-mutation edge list.
-_EDGE_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_EDGE_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()  # geolint: allow[GL001]
 _EDGE_CACHE_MAX = 8
+
+
+def reset_kernel_caches() -> None:
+    """Drop the identity-keyed edge cache and the subset-mask table
+    (test isolation hook; both rebuild lazily on next use)."""
+    _EDGE_CACHE.clear()
+    _SUBSET_HAS_CACHE.clear()
 
 
 def edge_cache_stats() -> dict:
@@ -518,7 +525,7 @@ def route_expand_batch(
 # and the (interpreted) kernel by a wide margin for small D.
 SUBSET_MAX_DCS = 8
 
-_SUBSET_HAS_CACHE: dict = {}
+_SUBSET_HAS_CACHE: dict = {}  # geolint: allow[GL001]
 
 
 def _subset_has(n_dc: int) -> Tuple[np.ndarray, np.ndarray]:

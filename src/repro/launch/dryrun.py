@@ -20,14 +20,12 @@ Usage:
 """
 import argparse
 import json
-import re
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs import all_cells, get_arch
@@ -86,16 +84,17 @@ def _compile_cell(arch, cell: Cell, mesh: Mesh, donate: bool):
         donate_argnums = ()
         if cell.kind == "decode":
             donate_argnums = (2,) if donate else ()  # donate KV caches
-    t0 = time.time()
+    # durations use the monotonic clock: time.time() deltas jump under NTP
+    t0 = time.perf_counter()
     jitted = jax.jit(
         step, in_shardings=_ns(mesh, specs), donate_argnums=donate_argnums
     )
     with use_mesh(mesh):
         lowered = jitted.lower(*args)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
     ca = compiled.cost_analysis() or {}
     info = {
         "t_lower_s": round(t_lower, 2),
@@ -213,7 +212,7 @@ def main() -> None:
                 print(f"[skip-existing] {mesh_name} {cell.key}")
                 continue
             print(f"[dryrun] {mesh_name} {cell.key} ...", flush=True)
-            t0 = time.time()
+            t0 = time.perf_counter()
             try:
                 rec = run_cell(cell, mesh, mesh_name, skip_variants=args.no_variants)
                 rec["ok"] = True
@@ -223,7 +222,7 @@ def main() -> None:
                     "ok": False, "error": f"{type(e).__name__}: {e}",
                 }
                 print(f"  FAILED: {rec['error']}")
-            rec["wall_s"] = round(time.time() - t0, 1)
+            rec["wall_s"] = round(time.perf_counter() - t0, 1)
             with open(path, "w") as f:
                 json.dump(rec, f, indent=1)
             if rec.get("ok") and "production" in rec:

@@ -8,7 +8,7 @@ exactly the latency layer the GeoLayer machinery treats as ``Layer_2``
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Sequence
 
 import numpy as np
 

@@ -18,7 +18,6 @@ from __future__ import annotations
 import argparse
 import glob
 import json
-import math
 import os
 from typing import Any, Dict, List, Optional
 
@@ -134,7 +133,6 @@ def _gnn_model_flops(arch_name: str, shape: str) -> Optional[float]:
         fwd = 3 * (E * per_edge + N * per_node) * 2
     elif arch_name == "equiformer-v2":
         c, lmax, mmax = 128, 6, 2
-        dim_tr = (mmax + 1) * (2 * lmax + 2 - mmax)  # ~29 truncated comps
         # SO(2) mixes: per |m| joint (l, c) matmul both directions
         so2 = sum(
             (2 if m else 1) * ((lmax + 1 - m) * c) ** 2 * 2

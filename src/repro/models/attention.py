@@ -11,7 +11,6 @@ KV caches are plain dicts of arrays; decode steps update them functionally.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Dict, Optional, Tuple
 
@@ -219,7 +218,6 @@ def gqa_decode(
         k_new = rmsnorm({"g": p["k_norm"]}, k_new)
     q = rope(q, position[:, None], rope_base)
     k_new = rope(k_new, position[:, None], rope_base)
-    b = x.shape[0]
     kc = jax.vmap(
         lambda c, n, pos: jax.lax.dynamic_update_slice(c, n, (0, pos, 0))
     )(cache["k"], k_new, position)

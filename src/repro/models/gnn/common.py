@@ -15,7 +15,7 @@ and batched molecules alike):
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

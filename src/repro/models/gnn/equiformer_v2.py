@@ -21,9 +21,8 @@ same dataflow class).
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +31,7 @@ import numpy as np
 from ..layers import Params, mlp, mlp_init
 from .common import masked_segment_sum, shard_ragged
 from .schnet import gaussian_rbf
-from .wigner import dir_to_angles, irreps_dim, rotate_irreps, sh_real, wigner_d_blocks
+from .wigner import dir_to_angles, irreps_dim, rotate_irreps, wigner_d_blocks
 
 __all__ = ["EqV2Spec", "eqv2_init", "eqv2_forward"]
 

@@ -6,7 +6,7 @@ runs under ``lax.scan`` over stacked per-step params (depth-independent HLO).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -24,7 +24,6 @@ import functools
 import math
 from typing import List, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -7,7 +7,7 @@ functions.  Compute dtype is bf16 by default (TPU target); params stay fp32.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -41,8 +41,8 @@ class BSTSpec:
 
 
 def bst_init(key, spec: BSTSpec) -> Params:
-    ks = jax.random.split(key, 6 + 4 * spec.n_blocks)
     d = spec.d_tok
+    ks = jax.random.split(key, 6 + 4 * spec.n_blocks)
     p: Params = {
         "item_table": table_init(ks[0], spec.n_items, spec.embed_dim),
         "cat_table": table_init(ks[1], spec.n_cats, spec.embed_dim),
@@ -77,7 +77,6 @@ def _encode_seq(p: Params, batch: Dict[str, jnp.ndarray], spec: BSTSpec, dtype):
 
 
 def _transformer(p: Params, x: jnp.ndarray, spec: BSTSpec, dtype) -> jnp.ndarray:
-    d = spec.d_tok
     for i in range(spec.n_blocks):
         blk = p[f"blk{i}"]
         h = layernorm(blk["ln1"], x)

@@ -8,14 +8,12 @@ get replicated (distributed/geo_sharding.py).
 """
 from __future__ import annotations
 
-import math
-from typing import Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from ...kernels import ops
-from ..layers import Params
 
 __all__ = ["table_init", "lookup", "bag_lookup"]
 

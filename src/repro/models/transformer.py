@@ -15,21 +15,12 @@ Entry points (pure functions, pjit-ready):
 from __future__ import annotations
 
 import dataclasses
-import functools
-import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .attention import (
-    gqa_decode,
-    gqa_forward,
-    gqa_init,
-    mla_decode,
-    mla_forward,
-    mla_init,
-)
+from .attention import gqa_init, mla_decode, mla_forward, mla_init
 from .layers import Params, cross_entropy, embedding_init, rmsnorm, rmsnorm_init, swiglu, swiglu_init
 from .moe import moe_forward, moe_init
 
@@ -204,7 +195,7 @@ def _block(
 def _gqa_forward_window(p, h, positions, window, cfg: LMConfig):
     """GQA forward where the sliding window is a traced scalar: uses the
     chunked/masked path with dynamic window masking."""
-    from .attention import chunked_attention, _split_heads, _merge_heads
+    from .attention import _split_heads, _merge_heads
     from .layers import rope
     from ..distributed.constraints import constrain
 
@@ -251,7 +242,6 @@ def _window_attention(q, k, v, window, chunk_kv: int = 1024, chunk_q: int = 2048
             q.dtype
         )
     # long path: chunked scan with dynamic window mask
-    from .attention import chunked_attention
 
     # chunked_attention accepts static window only; emulate dynamic window by
     # two-mask composition: causal chunked with kv_valid=None, window folded
@@ -424,7 +414,6 @@ def decode(
     cfg: LMConfig,
 ):
     """One-token serve step over stacked caches.  Returns (logits, caches)."""
-    b = token.shape[0]
     x = params["embed"]["table"].astype(cfg.dtype)[token][:, None]  # [B,1,d]
     windows = cfg.layer_windows()
 
@@ -472,7 +461,6 @@ def _gqa_decode_window(p, h, cache, position, window, cfg: LMConfig):
 
     dtype = cfg.dtype
     dp = ("pod", "data")
-    b = h.shape[0]
     hd_ = h.astype(dtype)
     q = constrain(_split_heads(hd_ @ p["wq"].astype(dtype), cfg.n_heads), dp, "model", None, None)
     k_new = constrain(_split_heads(hd_ @ p["wk"].astype(dtype), cfg.n_kv_heads), dp, "model", None, None)
@@ -488,7 +476,6 @@ def _gqa_decode_window(p, h, cache, position, window, cfg: LMConfig):
     vc = jax.vmap(lambda c, n, pos: jax.lax.dynamic_update_slice(c, n, (0, pos, 0)))(
         cache["v"], v_new, position
     )
-    skv = kc.shape[2]
     group = cfg.n_heads // cfg.n_kv_heads
     scale = cfg.hd ** -0.5
     # decode attention: one query against the cache, window+valid masked;

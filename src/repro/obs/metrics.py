@@ -636,7 +636,7 @@ def _merge_histogram_snapshots(cur: dict, inst: dict) -> None:
         weights[q] = w_old + n_new
 
 
-_default_registry = MetricsRegistry(enabled=False)
+_default_registry = MetricsRegistry(enabled=False)  # geolint: allow[GL001]
 
 
 def get_registry() -> MetricsRegistry:

@@ -178,12 +178,16 @@ class MaintenancePolicy:
                 n_links=len(wave.links),
                 est_makespan_s=round(wave.makespan_s, 6),
             )
-        for b in wave.links:
-            if reg.enabled:
-                reg.counter("migration.wan_bytes", src=b.src, dst=b.dst).inc(
-                    b.nbytes
-                )
-            if traced:
+        if reg.enabled:
+            # one grid update per wave — the per-link loop must not pay a
+            # string-keyed instrument lookup per link (GL004); grid cells
+            # export per-(src,dst) exactly like the old tagged counters
+            mat = np.zeros((env.n_dcs, env.n_dcs))
+            for b in wave.links:
+                mat[b.src, b.dst] += b.nbytes
+            reg.counter_grid("migration.wan_bytes", axes=("src", "dst")).add(mat)
+        if traced:
+            for b in wave.links:
                 est = b.nbytes / env.bw_Bps[b.src, b.dst] + env.rtt_s[b.src, b.dst]
                 tr.record(
                     "link_transfer", t0, min(t0 + est, t1), track="maintenance",
@@ -427,6 +431,7 @@ class MaintenancePolicy:
         epoch = getattr(self.store, "_id_epoch", 0)
         reg = self._reg()
         keep: Deque[Tuple] = deque(maxlen=self._prestage_ledger.maxlen)
+        hit_total = wasted_total = 0
         for entry in self._prestage_ledger:
             e_epoch, e_win, dc, items, od0 = entry
             if e_epoch != epoch:
@@ -438,11 +443,14 @@ class MaintenancePolicy:
             wasted = int(len(items) - hits)
             self.prestage_hits += hits
             self.prestage_wasted += wasted
-            if reg.enabled:
-                if hits:
-                    reg.counter("placement.prestage_hit").inc(hits)
-                if wasted:
-                    reg.counter("placement.prestage_wasted").inc(wasted)
+            hit_total += hits
+            wasted_total += wasted
+        # settle the counters once per drain, not per ledger entry (GL004)
+        if reg.enabled:
+            if hit_total:
+                reg.counter("placement.prestage_hit").inc(hit_total)
+            if wasted_total:
+                reg.counter("placement.prestage_wasted").inc(wasted_total)
         self._prestage_ledger = keep
 
     def _trace_simple(self, name: str, t0: float, cost_s: float) -> None:

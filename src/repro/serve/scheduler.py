@@ -43,11 +43,11 @@ import heapq
 import math
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..obs import Tracer, get_registry
+from ..obs import Tracer
 from .client import RequestHandle
 
 __all__ = ["SimClock", "AdmissionConfig", "BatchRecord", "AdmissionController"]
@@ -166,10 +166,16 @@ class AdmissionController:
 
     def __init__(self, store, config: Optional[AdmissionConfig] = None,
                  clock: Optional[SimClock] = None, policy=None,
-                 tracer: Optional[Tracer] = None, registry=None) -> None:
+                 tracer: Optional[Tracer] = None, registry=None,
+                 wall_clock: Optional[Callable[[], float]] = None) -> None:
         self.store = store
         self.cfg = config or AdmissionConfig()
         self.clock = clock or SimClock()
+        # fallback duration source for service_model="measured" when the
+        # store reports no serve time.  Injected (sim-clock purity, GL002):
+        # the default is a *reference* to the monotonic clock — tests pass a
+        # fake to keep measured-mode runs deterministic.
+        self._wall_clock = wall_clock if wall_clock is not None else time.perf_counter
         self.policy = policy  # optional MaintenancePolicy
         # control-plane spans run on the *simulated* clock: two identical
         # runs produce byte-identical trace exports.  An attached policy
@@ -427,7 +433,7 @@ class AdmissionController:
                 return []
         batch = self._form_batch(target, shard_key=shard_key)
         t0 = self.clock.now()
-        t_wall = time.perf_counter()
+        t_wall = self._wall_clock()
         try:
             results = self.store.serve_batch([(h.items, h.origin) for h in batch])
         except BaseException:
@@ -440,7 +446,7 @@ class AdmissionController:
             compute_s = (
                 float(measured)
                 if measured is not None
-                else time.perf_counter() - t_wall
+                else self._wall_clock() - t_wall
             )
         else:
             compute_s = (

@@ -15,7 +15,7 @@ is the single place that encodes this shift for placement/workload arrays.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 

@@ -78,6 +78,7 @@ class CheckpointManager:
             self._thread = None
 
     def _write(self, step: int, flat: Dict[str, np.ndarray]) -> None:
+        t0 = time.perf_counter()  # durations: monotonic, never time.time()
         final = os.path.join(self.dir, f"step_{step:08d}")
         tmp = final + ".tmp"
         if os.path.exists(tmp):
@@ -88,7 +89,8 @@ class CheckpointManager:
             "step": step,
             "n_leaves": len(flat),
             "config_hash": self.config_hash,
-            "time": time.time(),
+            "time": time.time(),  # wall timestamp only — NOT a duration
+            "save_s": round(time.perf_counter() - t0, 6),
             "done": True,
         }
         with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:

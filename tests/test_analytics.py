@@ -1,7 +1,6 @@
 import jax.numpy as jnp
 import networkx as nx
 import numpy as np
-import pytest
 
 from repro.core import analytics
 

@@ -1,8 +1,6 @@
 """Kernel autotuner: winner caching, deterministic serialization, fallbacks."""
 import json
 
-import numpy as np
-import pytest
 
 from repro.kernels import ops
 from repro.kernels.autotune import (

@@ -1,12 +1,10 @@
-import json
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.train.checkpoint import CheckpointManager, flatten_tree, unflatten_tree
+from repro.train.checkpoint import CheckpointManager
 
 
 def _state(seed=0):

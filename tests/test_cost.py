@@ -1,5 +1,4 @@
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # deterministic fallback, see tests/_hypothesis_stub.py
@@ -10,7 +9,6 @@ from repro.core.cost import (
     association_penalty,
     read_cost,
     storage_cost,
-    total_cost,
     write_cost,
 )
 from repro.core.latency import make_paper_env

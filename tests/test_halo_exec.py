@@ -6,7 +6,6 @@ import sys
 import textwrap
 
 import numpy as np
-import pytest
 
 from repro.core.graph import Graph
 from repro.distributed.halo_exec import build_halo_program, exchange_stats

@@ -4,7 +4,6 @@ import glob
 import json
 import os
 
-import numpy as np
 import pytest
 
 from repro.launch import roofline

@@ -1,8 +1,6 @@
 import numpy as np
-import pytest
 
 from repro.core.graph import Graph, weakly_connected_components
-from repro.core.latency import make_paper_env
 from repro.core.layered_graph import build_layered_graph
 
 

@@ -1,7 +1,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.gnn.egnn import egnn_forward, egnn_init
 from repro.models.gnn.equiformer_v2 import EqV2Spec, eqv2_forward, eqv2_init

@@ -82,7 +82,6 @@ def test_scan_equals_unrolled():
 def test_moe_load_stats():
     from repro.models.moe import moe_forward, moe_init
 
-    cfg = VARIANTS["moe"]
     key = jax.random.PRNGKey(0)
     p = moe_init(key, 64, 32, 8, 1)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64), jnp.bfloat16)

@@ -1,5 +1,4 @@
 import numpy as np
-import pytest
 
 from repro.core.cost import total_cost
 from repro.core.latency import make_paper_env

@@ -1,21 +1,15 @@
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # deterministic fallback, see tests/_hypothesis_stub.py
     from _hypothesis_stub import given, settings, st
 
-from repro.core.graph import build_csr
 from repro.core.patterns import (
     Pattern,
-    Workload,
     _decompose_overlap_regions_py,
     decompose_overlap_regions,
-    generate_khop_patterns,
-    region_adjacency,
 )
-from repro.data.synthetic import make_benchmark_graph
 
 
 def test_khop_patterns_valid(small_setup):

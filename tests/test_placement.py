@@ -4,7 +4,6 @@ import pytest
 from repro.core.cost import total_cost
 from repro.core.layered_graph import build_layered_graph
 from repro.core.placement import (
-    HeatCache,
     PlacedUnit,
     PlacementConfig,
     overlap_centric_placement,

@@ -20,13 +20,7 @@ from repro.core import dhd
 from repro.core.graph import build_csr
 from repro.core.latency import make_paper_env
 from repro.core.layered_graph import build_layered_graph
-from repro.core.patterns import (
-    OverlapRegion,
-    Pattern,
-    Workload,
-    decompose_overlap_regions,
-    generate_khop_patterns,
-)
+from repro.core.patterns import OverlapRegion, Pattern, Workload, generate_khop_patterns
 from repro.core.placement import (
     CompetitionArena,
     HeatCache,

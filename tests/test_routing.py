@@ -1,5 +1,4 @@
 import numpy as np
-import pytest
 
 from repro.core.routing import route_offline, route_online
 

@@ -1,5 +1,4 @@
 import numpy as np
-import pytest
 
 from repro.core.graph import build_csr
 from repro.data.pipeline import Prefetcher, RecsysPipeline, TokenPipeline, shard_batch

@@ -1,0 +1,161 @@
+"""Runtime invariant sanitizer: a clean store passes every differential
+check, and each deliberately-injected corruption — route-index drift, heat
+aliasing break, journal re-key, metrics type clash — raises
+:class:`SanitizerError` naming the violated invariant.
+"""
+import types
+
+import pytest
+
+from repro.core.graph import build_csr
+from repro.core.latency import make_paper_env
+from repro.core.patterns import Workload, generate_khop_patterns
+from repro.core.placement import PlacementConfig
+from repro.core.store import GeoGraphStore
+from repro.data.synthetic import community_graph
+from repro.debug.sanitize import (
+    SanitizerError,
+    StoreSanitizer,
+    attach_sanitizer,
+    maybe_attach,
+    sanitize_enabled,
+)
+from repro.demand import ODDemandLayer
+from repro.obs.metrics import MetricsRegistry
+
+
+def _fresh_store(seed=0, n_vertices=400, n_patterns=24):
+    g = community_graph(
+        n_vertices, n_communities=8, p_in=0.04, p_out=0.001, seed=seed, n_dcs=5
+    )
+    env = make_paper_env()
+    csr = build_csr(g.n_nodes, g.src, g.dst, symmetrize=True)
+    pats = generate_khop_patterns(g, csr, n_patterns, seed=seed + 1, n_dcs=env.n_dcs)
+    wl = Workload.from_patterns(pats, g.n_items, env.n_dcs)
+    return GeoGraphStore(
+        g,
+        env,
+        wl,
+        config=PlacementConfig(precache=False, dhd_steps=4),
+        demand_window_s=6.0,
+    )
+
+
+@pytest.fixture(scope="module")
+def store():
+    return _fresh_store()
+
+
+# ----------------------------------------------------------------- clean run
+def test_clean_store_passes_all_checks(store):
+    s = StoreSanitizer(store)
+    assert s.check() is True
+    assert s.checks_run == 1
+
+
+# ------------------------------------------------------ injected corruptions
+def test_route_index_corruption_is_caught(store):
+    """Acceptance criterion: flip one incremental-index entry and the
+    differential rebuild check must refuse it."""
+    idx = store.route_index
+    assert idx is not None
+    old = int(idx.nearest[0, 0])
+    idx.nearest[0, 0] = (old + 1) % store.env.n_dcs
+    try:
+        with pytest.raises(SanitizerError, match="route-index divergence"):
+            StoreSanitizer(store).check()
+    finally:
+        idx.nearest[0, 0] = old
+    StoreSanitizer(store).check()  # restored → clean again
+
+
+def test_heat_aliasing_break_is_caught(store):
+    dc = next(iter(store.caches))
+    cache = store.caches[dc]
+    orig = cache.demand
+    cache.demand = ODDemandLayer(store.g.n_items, 1)  # forked heat table
+    try:
+        with pytest.raises(SanitizerError, match="heat aliasing"):
+            StoreSanitizer(store).check()
+    finally:
+        cache.demand = orig
+    StoreSanitizer(store).check()
+
+
+def test_journal_uid_copy_is_caught(store):
+    journal = store._placement_journal
+    orig = journal.item_uid
+    journal.item_uid = store._item_uid.copy()  # equal values, broken identity
+    try:
+        with pytest.raises(SanitizerError, match="journal digest"):
+            StoreSanitizer(store).check()
+    finally:
+        journal.item_uid = orig
+    StoreSanitizer(store).check()
+
+
+def test_metrics_type_clash_is_caught(store):
+    r1 = MetricsRegistry(enabled=True)
+    r2 = MetricsRegistry(enabled=True)
+    r1.counter("sanitize.clash").inc()
+    r2.histogram("sanitize.clash").observe(1.0)
+    store.shard_registries = [r1, r2]
+    try:
+        with pytest.raises(SanitizerError, match="metrics merge"):
+            StoreSanitizer(store).check()
+    finally:
+        del store.shard_registries
+    StoreSanitizer(store).check()
+
+
+# -------------------------------------------------------- attach & cadence
+def _dummy_store():
+    calls = []
+    store = types.SimpleNamespace(calls=calls)
+    store.apply_updates = lambda *a, **k: calls.append(("apply_updates", a))
+    store.compact = lambda *a, **k: calls.append(("compact", a))
+    return store
+
+
+def test_attach_wraps_mutators_and_checks_on_cadence():
+    store = _dummy_store()
+    s = attach_sanitizer(store, every=2)
+    store.apply_updates(1)
+    assert s.ops_seen == 1 and s.checks_run == 0
+    store.compact()
+    assert s.ops_seen == 2 and s.checks_run == 1
+    assert store.calls == [("apply_updates", (1,)), ("compact", ())]
+
+
+def test_attach_is_idempotent():
+    store = _dummy_store()
+    s1 = attach_sanitizer(store)
+    wrapped = store.apply_updates
+    s2 = attach_sanitizer(store)
+    assert s1 is s2
+    assert store.apply_updates is wrapped  # not double-wrapped
+
+
+def test_maybe_attach_respects_env(monkeypatch):
+    store = _dummy_store()
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert not sanitize_enabled()
+    assert maybe_attach(store) is None
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert maybe_attach(store) is None
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize_enabled()
+    assert maybe_attach(store) is not None
+
+
+def test_sanitizer_survives_store_ops(store):
+    """End-to-end: wrapped real-store mutators run checks that pass."""
+    s = attach_sanitizer(store, every=1)
+    before = s.checks_run
+    pats = generate_khop_patterns(
+        store.g, build_csr(store.g.n_nodes, store.g.src, store.g.dst, symmetrize=True),
+        4, seed=7, n_dcs=store.env.n_dcs,
+    )
+    store.serve_batch([(p, 0) for p in pats[:2]])
+    store.maintain()
+    assert s.checks_run > before

@@ -1,6 +1,5 @@
 import numpy as np
 import jax
-import pytest
 
 from repro.models.transformer import LMConfig, init_params
 from repro.serve.engine import Engine, Request, ServeConfig

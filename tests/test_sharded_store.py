@@ -23,7 +23,6 @@ CI forces an 8-device CPU mesh via
 shard cycles onto one device and the same assertions hold (single-process
 fallback).
 """
-import math
 
 import numpy as np
 import pytest

@@ -1,6 +1,5 @@
 """End-to-end system behaviour of the GeoGraphStore."""
 import numpy as np
-import pytest
 
 from repro.core.patterns import Pattern
 

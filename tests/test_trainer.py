@@ -1,6 +1,5 @@
 import numpy as np
 import jax
-import pytest
 
 from repro.data.pipeline import TokenPipeline
 from repro.distributed.fault import FailureSimulator

@@ -1,7 +1,6 @@
 """Property tests for the eSCN rotation machinery (validated to l_max=6)."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # deterministic fallback, see tests/_hypothesis_stub.py

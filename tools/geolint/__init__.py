@@ -1,0 +1,27 @@
+"""geolint — repo-specific AST invariant linter for the GeoLayer stack.
+
+Zero-dependency (stdlib ``ast`` only).  Each rule encodes an invariant a
+prior PR established and that the differential test suites *assume*:
+
+=======  ==============================================================
+GL001    no module-level mutable state in ``src/repro`` (allowlisted
+         singletons must expose ``reset()``)
+GL002    sim-clock purity: no wall-clock / unseeded-RNG calls in the
+         control plane (``serve/``, ``demand/``, ``streaming/migration.py``)
+GL003    heat single-ownership: ``HeatCache.heat`` is only written
+         through ``src/repro/demand/``
+GL004    telemetry hot-path discipline: no string-keyed instrument
+         lookups inside loops in ``core/routing.py`` / ``serve/``
+GL005    jit / Pallas purity: no side effects, host ``np.*`` calls or
+         float64 mixing inside jitted functions and kernel bodies
+GL006    epoch-guard coverage: re-keying ``GeoGraphStore`` row layout
+         must bump the flush epoch and fire remap listeners
+=======  ==============================================================
+
+Run ``python -m tools.geolint src tests benchmarks`` from the repo root.
+Suppress a finding with an inline ``# geolint: allow[GLxxx]`` pragma
+(GL001 additionally requires a ``reset()`` exposure — see rules.py).
+"""
+from .engine import Violation, lint_file, lint_paths, lint_source, main
+
+__all__ = ["Violation", "lint_file", "lint_paths", "lint_source", "main"]

@@ -1,0 +1,186 @@
+"""geolint driver: file collection, pragma parsing, reporting, CLI.
+
+The engine is rule-agnostic: it parses each file once, extracts the
+inline ``# geolint: allow[GLxxx]`` pragmas, and hands a
+:class:`RuleContext` to every rule in :mod:`tools.geolint.rules`.
+Rules decide their own path scope from ``ctx.tail`` (the repo-relative
+posix path), which is recovered from *anywhere* in the absolute path —
+so fixture trees under ``/tmp/.../src/repro/serve/x.py`` scope exactly
+like the real tree and the rule tests need no repo checkout.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import json
+import os
+import re
+import sys
+import time
+from typing import Dict, List, Optional, Sequence, Set
+
+__all__ = ["Violation", "RuleContext", "lint_source", "lint_file", "lint_paths", "main"]
+
+_PRAGMA_RE = re.compile(r"#\s*geolint:\s*allow\[([A-Z0-9_,\s]+)\]")
+
+# path segments that anchor scope resolution (checked in order; the
+# *last* occurrence wins so scratch dirs containing a marker still work)
+_MARKERS = ("src/repro/", "tests/", "benchmarks/", "tools/", "examples/")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+    def as_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class RuleContext:
+    """Everything one rule needs to scan one file."""
+
+    path: str  # path as passed on the command line (diagnostics)
+    tail: str  # repo-relative posix path (scope decisions)
+    tree: ast.Module
+    source: str
+    pragmas: Dict[int, Set[str]]  # line -> rules allowed on that line
+
+    def allowed(self, rule: str, line: int) -> bool:
+        return rule in self.pragmas.get(line, ())
+
+
+def _path_tail(path: str) -> str:
+    """Repo-relative posix tail of ``path`` (see module docstring)."""
+    p = path.replace(os.sep, "/")
+    best = None
+    for marker in _MARKERS:
+        i = p.rfind("/" + marker)
+        if i >= 0:
+            cand = p[i + 1 :]
+        elif p.startswith(marker):
+            cand = p
+        else:
+            continue
+        if best is None or len(cand) < len(best):
+            best = cand  # innermost marker = shortest tail
+    return best if best is not None else p
+
+
+def _parse_pragmas(source: str) -> Dict[int, Set[str]]:
+    pragmas: Dict[int, Set[str]] = {}
+    for lineno, line in enumerate(source.splitlines(), start=1):
+        m = _PRAGMA_RE.search(line)
+        if m:
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            pragmas[lineno] = rules
+    return pragmas
+
+
+def lint_source(source: str, path: str) -> List[Violation]:
+    """Lint one file's source; ``path`` drives rule scoping."""
+    from . import rules  # late import: rules imports Violation from here
+
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [
+            Violation(
+                "GL000", path, e.lineno or 1, (e.offset or 1) - 1,
+                f"syntax error: {e.msg}",
+            )
+        ]
+    ctx = RuleContext(
+        path=path,
+        tail=_path_tail(path),
+        tree=tree,
+        source=source,
+        pragmas=_parse_pragmas(source),
+    )
+    out: List[Violation] = []
+    for rule in rules.ALL_RULES:
+        out.extend(rule(ctx))
+    return out
+
+
+def lint_file(path: str) -> List[Violation]:
+    with open(path, "r", encoding="utf-8") as f:
+        return lint_source(f.read(), path)
+
+
+def _collect(paths: Sequence[str]) -> List[str]:
+    files: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                files.append(p)
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = [
+                d for d in dirnames
+                if d != "__pycache__" and not d.startswith(".")
+            ]
+            files.extend(
+                os.path.join(dirpath, f) for f in filenames if f.endswith(".py")
+            )
+    return sorted(files)
+
+
+def lint_paths(paths: Sequence[str]) -> List[Violation]:
+    out: List[Violation] = []
+    for f in _collect(paths):
+        out.extend(lint_file(f))
+    out.sort(key=lambda v: (v.path, v.line, v.rule))
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.geolint",
+        description="GeoLayer repo-specific AST invariant linter",
+    )
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument(
+        "--json", dest="json_out", default=None,
+        help="also write a JSON report to this path",
+    )
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    files = _collect(args.paths)
+    violations: List[Violation] = []
+    for f in files:
+        violations.extend(lint_file(f))
+    violations.sort(key=lambda v: (v.path, v.line, v.rule))
+    elapsed = time.perf_counter() - t0
+
+    for v in violations:
+        print(v.format())
+    if args.json_out:
+        report = {
+            "files_scanned": len(files),
+            "elapsed_s": round(elapsed, 3),
+            "n_violations": len(violations),
+            "violations": [v.as_dict() for v in violations],
+        }
+        with open(args.json_out, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+    print(
+        f"geolint: {len(violations)} violation(s) across {len(files)} files "
+        f"in {elapsed:.2f}s",
+        file=sys.stderr,
+    )
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

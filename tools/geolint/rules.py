@@ -1,0 +1,511 @@
+"""The six GL rules.  Each rule is ``rule(ctx) -> List[Violation]``.
+
+Scope conventions (``ctx.tail`` is the repo-relative posix path):
+
+* GL001 — everything under ``src/repro/``
+* GL002 — ``src/repro/serve/``, ``src/repro/demand/``,
+  ``src/repro/streaming/migration.py``
+* GL003 — everywhere *except* ``src/repro/demand/``
+* GL004 — ``src/repro/core/routing.py`` and ``src/repro/serve/``
+* GL005 — ``src/repro/kernels/``
+* GL006 — any file defining ``class GeoGraphStore``
+
+Inline ``# geolint: allow[GLxxx]`` pragmas suppress a finding on that
+line.  GL001 pragmas are only honored when the module also exposes a
+reset path for the allowlisted name: a module-level ``*reset*``/
+``*clear*`` function referencing it, or the value being constructed
+from a same-module class that defines ``reset()`` — the contract that
+makes test isolation possible for the registry/autotuner singletons.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Sequence, Set, Tuple
+
+from .engine import RuleContext, Violation
+
+__all__ = ["ALL_RULES"]
+
+
+# --------------------------------------------------------------- helpers
+def _dotted(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """``a.b.c`` -> ("a", "b", "c"); None when the root is not a Name."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def _v(ctx: RuleContext, rule: str, node: ast.AST, msg: str) -> Violation:
+    return Violation(rule, ctx.path, node.lineno, node.col_offset, msg)
+
+
+# ----------------------------------------------------------------- GL001
+_MUTABLE_CALLS = {
+    "dict", "list", "set", "OrderedDict", "defaultdict", "deque", "Counter",
+}
+_MUTATOR_METHODS = {
+    "append", "appendleft", "add", "update", "setdefault", "pop", "popitem",
+    "clear", "extend", "insert", "remove", "discard", "move_to_end",
+}
+
+
+def _is_mutable_value(value: ast.AST) -> bool:
+    if isinstance(value, (ast.Dict, ast.List, ast.Set,
+                          ast.DictComp, ast.ListComp, ast.SetComp)):
+        return True
+    if isinstance(value, ast.Call):
+        ch = _dotted(value.func)
+        return bool(ch) and ch[-1] in _MUTABLE_CALLS
+    return False
+
+
+def _mutated_names(tree: ast.Module) -> Tuple[Set[str], Set[str]]:
+    """(names mutated in place, names declared ``global`` somewhere)."""
+    mutated: Set[str] = set()
+    global_names: Set[str] = set()
+
+    def sub_name(t: ast.AST) -> Optional[str]:
+        if isinstance(t, ast.Subscript) and isinstance(t.value, ast.Name):
+            return t.value.id
+        return None
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Global):
+            global_names.update(node.names)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                n = sub_name(t)
+                if n:
+                    mutated.add(n)
+        elif isinstance(node, ast.AugAssign):
+            n = sub_name(node.target)
+            if n:
+                mutated.add(n)
+        elif isinstance(node, ast.Delete):
+            for t in node.targets:
+                n = sub_name(t)
+                if n:
+                    mutated.add(n)
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if (
+                isinstance(f, ast.Attribute)
+                and f.attr in _MUTATOR_METHODS
+                and isinstance(f.value, ast.Name)
+            ):
+                mutated.add(f.value.id)
+    # module-level AugAssign on a bare name rebinds module state in place
+    for stmt in tree.body:
+        if isinstance(stmt, ast.AugAssign) and isinstance(stmt.target, ast.Name):
+            mutated.add(stmt.target.id)
+    return mutated, global_names
+
+
+def _has_reset_exposure(tree: ast.Module, name: str, value: ast.AST) -> bool:
+    for stmt in tree.body:
+        if isinstance(stmt, ast.FunctionDef) and (
+            "reset" in stmt.name.lower() or "clear" in stmt.name.lower()
+        ):
+            for n in ast.walk(stmt):
+                if isinstance(n, ast.Name) and n.id == name:
+                    return True
+                if isinstance(n, ast.Global) and name in n.names:
+                    return True
+    if isinstance(value, ast.Call) and isinstance(value.func, ast.Name):
+        cls_name = value.func.id
+        for stmt in tree.body:
+            if isinstance(stmt, ast.ClassDef) and stmt.name == cls_name:
+                if any(
+                    isinstance(m, ast.FunctionDef) and m.name == "reset"
+                    for m in stmt.body
+                ):
+                    return True
+    return False
+
+
+def gl001_module_mutable_state(ctx: RuleContext) -> List[Violation]:
+    if not ctx.tail.startswith("src/repro/"):
+        return []
+    mutated, global_names = _mutated_names(ctx.tree)
+    out: List[Violation] = []
+    for stmt in ctx.tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            target, value = stmt.targets[0], stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            target, value = stmt.target, stmt.value
+        else:
+            continue
+        if not isinstance(target, ast.Name):
+            continue
+        name = target.id
+        is_state = (_is_mutable_value(value) and name in mutated) or (
+            name in global_names
+        )
+        if not is_state:
+            continue
+        if ctx.allowed("GL001", stmt.lineno):
+            if _has_reset_exposure(ctx.tree, name, value):
+                continue
+            out.append(_v(
+                ctx, "GL001", stmt,
+                f"allowlisted module-level state '{name}' has no reset() "
+                f"exposure (add a *reset*/*clear* function referencing it, "
+                f"or give its class a reset() method)",
+            ))
+            continue
+        out.append(_v(
+            ctx, "GL001", stmt,
+            f"module-level mutable state '{name}' (mutated in this module); "
+            f"move it behind an injected object, or allowlist with "
+            f"'# geolint: allow[GL001]' plus a reset() exposure",
+        ))
+    return out
+
+
+# ----------------------------------------------------------------- GL002
+_CLOCK_FNS = {"time", "perf_counter", "monotonic", "clock", "process_time"}
+_GL002_SCOPES = ("src/repro/serve/", "src/repro/demand/")
+_GL002_FILES = ("src/repro/streaming/migration.py",)
+
+
+def gl002_sim_clock_purity(ctx: RuleContext) -> List[Violation]:
+    if not (
+        ctx.tail.startswith(_GL002_SCOPES) or ctx.tail in _GL002_FILES
+    ):
+        return []
+    # bare names imported straight off the clock/RNG modules
+    bare_clocks: Set[str] = set()
+    bare_rngs: Set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.ImportFrom):
+            if node.module == "time":
+                bare_clocks.update(
+                    a.asname or a.name for a in node.names
+                    if a.name in _CLOCK_FNS
+                )
+            elif node.module in ("numpy.random", "numpy.random._generator"):
+                bare_rngs.update(a.asname or a.name for a in node.names)
+    out: List[Violation] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        ch = _dotted(node.func)
+        if ch is None:
+            continue
+        if ctx.allowed("GL002", node.lineno):
+            continue
+        if (len(ch) == 2 and ch[0] == "time" and ch[1] in _CLOCK_FNS) or (
+            len(ch) == 1 and ch[0] in bare_clocks
+        ):
+            out.append(_v(
+                ctx, "GL002", node,
+                f"wall-clock call {'.'.join(ch)}() in a control-plane module; "
+                f"inject a clock (a bare default like "
+                f"'clock=time.perf_counter' is fine — calling it here is not)",
+            ))
+            continue
+        is_np_random = len(ch) >= 3 and ch[0] in ("np", "numpy") and ch[1] == "random"
+        if is_np_random:
+            fn = ch[2]
+            if fn in ("Generator", "SeedSequence", "BitGenerator", "Philox",
+                      "PCG64"):
+                continue
+            if fn == "default_rng" and node.args:
+                continue  # seeded construction is deterministic
+            out.append(_v(
+                ctx, "GL002", node,
+                f"unseeded numpy RNG {'.'.join(ch)}() in a control-plane "
+                f"module; inject a seeded np.random.Generator",
+            ))
+        elif len(ch) == 1 and ch[0] in bare_rngs and not node.args:
+            out.append(_v(
+                ctx, "GL002", node,
+                f"unseeded numpy RNG {ch[0]}() in a control-plane module; "
+                f"inject a seeded np.random.Generator",
+            ))
+    return out
+
+
+# ----------------------------------------------------------------- GL003
+def _heat_receiver(target: ast.AST) -> Optional[ast.AST]:
+    """The receiver expr when ``target`` writes through ``.heat``."""
+    t = target
+    if isinstance(t, ast.Subscript):
+        t = t.value
+    if isinstance(t, ast.Attribute) and t.attr == "heat":
+        return t.value
+    return None
+
+
+class _HeatWriteVisitor(ast.NodeVisitor):
+    def __init__(self, ctx: RuleContext) -> None:
+        self.ctx = ctx
+        self.out: List[Violation] = []
+        self._class_heat_prop: List[bool] = []
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        has_prop = any(
+            isinstance(m, ast.FunctionDef) and m.name == "heat"
+            and any(
+                (d_ch := _dotted(d)) is not None
+                and d_ch[-1] in ("property", "cached_property")
+                for d in m.decorator_list
+            )
+            for m in node.body
+        )
+        self._class_heat_prop.append(has_prop)
+        self.generic_visit(node)
+        self._class_heat_prop.pop()
+
+    def _check_target(self, target: ast.AST, stmt: ast.AST) -> None:
+        recv = _heat_receiver(target)
+        if recv is None:
+            return
+        if self.ctx.allowed("GL003", stmt.lineno):
+            return
+        if isinstance(recv, ast.Name) and recv.id == "self":
+            # plain attribute on the owning object is fine; a write through
+            # a `heat` *property* (the HeatCache shared-storage view) is not
+            if not (self._class_heat_prop and self._class_heat_prop[-1]):
+                return
+        self.out.append(_v(
+            self.ctx, "GL003", stmt,
+            "write to a '.heat' view outside src/repro/demand/ — heat is "
+            "single-owned by ODDemandLayer; add a write-back method on the "
+            "demand layer instead",
+        ))
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            self._check_target(t, node)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._check_target(node.target, node)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        self._check_target(node.target, node)
+        self.generic_visit(node)
+
+
+def gl003_heat_ownership(ctx: RuleContext) -> List[Violation]:
+    if ctx.tail.startswith("src/repro/demand/"):
+        return []
+    v = _HeatWriteVisitor(ctx)
+    v.visit(ctx.tree)
+    return v.out
+
+
+# ----------------------------------------------------------------- GL004
+_GL004_FILES = ("src/repro/core/routing.py",)
+_GL004_SCOPES = ("src/repro/serve/",)
+_STRING_KEYED = {"counter", "histogram"}
+
+
+class _HotLoopVisitor(ast.NodeVisitor):
+    def __init__(self, ctx: RuleContext) -> None:
+        self.ctx = ctx
+        self.out: List[Violation] = []
+        self._loop_depth = 0
+
+    def _visit_loop(self, node: ast.AST) -> None:
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    visit_For = visit_While = visit_AsyncFor = _visit_loop
+
+    def _visit_fn(self, node: ast.AST) -> None:
+        # a nested def runs later, not per loop iteration
+        saved, self._loop_depth = self._loop_depth, 0
+        self.generic_visit(node)
+        self._loop_depth = saved
+
+    visit_FunctionDef = visit_AsyncFunctionDef = visit_Lambda = _visit_fn
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if (
+            self._loop_depth > 0
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in _STRING_KEYED
+            and node.args
+            and isinstance(node.args[0], ast.Constant)
+            and isinstance(node.args[0].value, str)
+            and not self.ctx.allowed("GL004", node.lineno)
+        ):
+            self.out.append(_v(
+                self.ctx, "GL004", node,
+                f"string-keyed registry.{node.func.attr}"
+                f"({node.args[0].value!r}) lookup inside a loop; hoist the "
+                f"handle, or use counter_keyed/counter_grid",
+            ))
+        self.generic_visit(node)
+
+
+def gl004_hot_path_telemetry(ctx: RuleContext) -> List[Violation]:
+    if not (ctx.tail in _GL004_FILES or ctx.tail.startswith(_GL004_SCOPES)):
+        return []
+    v = _HotLoopVisitor(ctx)
+    v.visit(ctx.tree)
+    return v.out
+
+
+# ----------------------------------------------------------------- GL005
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    ch = _dotted(dec)
+    if ch is not None and ch[-1] == "jit":
+        return True
+    if isinstance(dec, ast.Call):
+        fch = _dotted(dec.func)
+        if fch is not None and fch[-1] == "jit":
+            return True
+        if fch is not None and fch[-1] == "partial" and dec.args:
+            ach = _dotted(dec.args[0])
+            if ach is not None and ach[-1] == "jit":
+                return True
+    return False
+
+
+def _pallas_kernel_names(tree: ast.Module) -> Set[str]:
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        ch = _dotted(node.func)
+        if ch is None or ch[-1] != "pallas_call" or not node.args:
+            continue
+        body = node.args[0]
+        if isinstance(body, ast.Name):
+            names.add(body.id)
+        elif isinstance(body, ast.Call):
+            fch = _dotted(body.func)
+            if fch is not None and fch[-1] == "partial" and body.args:
+                if isinstance(body.args[0], ast.Name):
+                    names.add(body.args[0].id)
+    return names
+
+
+def gl005_traced_purity(ctx: RuleContext) -> List[Violation]:
+    if not ctx.tail.startswith("src/repro/kernels/"):
+        return []
+    kernel_names = _pallas_kernel_names(ctx.tree)
+    out: List[Violation] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        is_traced = node.name in kernel_names or any(
+            _is_jit_decorator(d) for d in node.decorator_list
+        )
+        if not is_traced:
+            continue
+        where = (
+            "Pallas kernel body" if node.name in kernel_names
+            else "@jax.jit function"
+        )
+        for sub in ast.walk(node):
+            line = getattr(sub, "lineno", node.lineno)
+            if ctx.allowed("GL005", line):
+                continue
+            if isinstance(sub, ast.Call):
+                ch = _dotted(sub.func)
+                if ch is None:
+                    continue
+                if ch == ("print",):
+                    out.append(_v(
+                        ctx, "GL005", sub,
+                        f"print() inside {where} '{node.name}' — Python side "
+                        f"effects do not trace; use jax.debug.print",
+                    ))
+                elif ch[0] in ("np", "numpy") and len(ch) > 1:
+                    out.append(_v(
+                        ctx, "GL005", sub,
+                        f"host numpy call {'.'.join(ch)}() inside {where} "
+                        f"'{node.name}' — silently constant-folds traced "
+                        f"values; use jnp, or allowlist if provably static",
+                    ))
+            elif isinstance(sub, (ast.Global, ast.Nonlocal)):
+                out.append(_v(
+                    ctx, "GL005", sub,
+                    f"global/nonlocal inside {where} '{node.name}' — traced "
+                    f"code must be side-effect free",
+                ))
+            elif isinstance(sub, ast.Attribute) and sub.attr == "float64":
+                ch = _dotted(sub)
+                if ch is not None and ch[0] in ("np", "numpy", "jnp"):
+                    out.append(_v(
+                        ctx, "GL005", sub,
+                        f"float64 reference inside {where} '{node.name}' — "
+                        f"kernels are f32; implicit f64 mixing breaks TPU "
+                        f"lowering",
+                    ))
+    return out
+
+
+# ----------------------------------------------------------------- GL006
+def _writes_self_attr(node: ast.AST, attr: str) -> bool:
+    return (
+        isinstance(node, ast.Attribute)
+        and node.attr == attr
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    )
+
+
+def gl006_epoch_guard(ctx: RuleContext) -> List[Violation]:
+    out: List[Violation] = []
+    for cls in ast.walk(ctx.tree):
+        if not isinstance(cls, ast.ClassDef) or cls.name != "GeoGraphStore":
+            continue
+        for fn in cls.body:
+            if not isinstance(fn, ast.FunctionDef) or fn.name == "__init__":
+                continue
+            rekeys: List[ast.AST] = []
+            bumps_epoch = False
+            fires_remap = False
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Assign):
+                    for t in sub.targets:
+                        if _writes_self_attr(t, "_item_uid"):
+                            rekeys.append(sub)
+                        if _writes_self_attr(t, "_id_epoch"):
+                            bumps_epoch = True
+                elif isinstance(sub, ast.AugAssign):
+                    if _writes_self_attr(sub.target, "_id_epoch"):
+                        bumps_epoch = True
+                elif isinstance(sub, ast.Call):
+                    ch = _dotted(sub.func)
+                    if ch is not None and ch[-1] == "_fire_remap_listeners":
+                        fires_remap = True
+            for stmt in rekeys:
+                if ctx.allowed("GL006", stmt.lineno):
+                    continue
+                missing = []
+                if not bumps_epoch:
+                    missing.append("bump self._id_epoch")
+                if not fires_remap:
+                    missing.append("call self._fire_remap_listeners(imap)")
+                if missing:
+                    out.append(_v(
+                        ctx, "GL006", stmt,
+                        f"'{fn.name}' re-keys the row layout "
+                        f"(assigns self._item_uid) but does not "
+                        f"{' or '.join(missing)} — in-flight flushes and "
+                        f"subscribers would silently desync",
+                    ))
+    return out
+
+
+ALL_RULES: Sequence = (
+    gl001_module_mutable_state,
+    gl002_sim_clock_purity,
+    gl003_heat_ownership,
+    gl004_hot_path_telemetry,
+    gl005_traced_purity,
+    gl006_epoch_guard,
+)
